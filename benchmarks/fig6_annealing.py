@@ -1,0 +1,45 @@
+"""Paper Fig. 6: simulated-annealing routing-reduction curves per layer.
+
+Reports the fraction of routes remaining vs annealer iterations; the
+paper observes reductions down to <50% for early/late layers and near-
+complete connectivity for the 2-bit model's last layers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, resnet18_weight_codes
+from repro.core.tlmac import compile_layer
+
+
+def run(bits_list=(2, 3, 4), layers_subset=(0, 7, 15), anneal_iters=20000,
+        quiet=False):
+    results = {}
+    for bits in bits_list:
+        layers = resnet18_weight_codes(bits)
+        curves = {}
+        for li in layers_subset:
+            name, codes = layers[li]
+            plan = compile_layer(codes, B_w=bits, B_a=bits,
+                                 anneal_iters=anneal_iters, pack_luts=False)
+            hist = plan.anneal.history
+            curves[name] = dict(
+                r_init=plan.routes_before, r_final=plan.routes_after,
+                remaining=plan.routes_after / max(plan.routes_before, 1),
+                history=hist.tolist(),
+            )
+            if not quiet:
+                csv_row("fig6", f"bits={bits}", name, plan.routes_before,
+                        plan.routes_after,
+                        f"{curves[name]['remaining']*100:.1f}%")
+        results[bits] = curves
+    return results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

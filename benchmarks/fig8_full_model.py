@@ -1,0 +1,58 @@
+"""Paper Fig. 8 + §6.3: full-network implementation — per-block LUT/FF/
+BRAM utilisation and power for 2/3/4-bit ResNet-18, vs XCVU13P capacity.
+
+Reproduces the §6.3 claims: the 3-bit model fits the device; the 4-bit
+model's logic fits (needs floorplanning) — routing congestion is the
+binding constraint the cost model flags via total mux fan-in.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, resnet18_weight_codes
+from repro.core.tlmac import compile_layer
+from repro.core.tlmac.costmodel import XCVU13P, FPGAResources, power_estimate
+
+
+def run(bits_list=(2, 3, 4), anneal_iters=1500, quiet=False):
+    out = {}
+    for bits in bits_list:
+        layers = resnet18_weight_codes(bits)
+        per_block = []
+        total = FPGAResources(0, 0, 0, 0.0, 0)
+        for bi in range(0, len(layers), 2):
+            plans = [
+                compile_layer(codes, B_w=bits, B_a=bits,
+                              anneal_iters=anneal_iters, pack_luts=False)
+                for _, codes in layers[bi : bi + 2]
+            ]
+            res = plans[0].resources + plans[1].resources
+            per_block.append(res)
+            total = total + res
+        pw = power_estimate(total)
+        out[bits] = dict(
+            total_luts=total.luts,
+            util=total.luts / XCVU13P.luts,
+            bram=total.bram36,
+            ffs=total.ffs,
+            power=pw,
+            fits=total.luts / XCVU13P.luts < 0.8,
+        )
+        if not quiet:
+            csv_row("# fig8", f"bits={bits}")
+            for i, r in enumerate(per_block):
+                csv_row(f"block{i+1}", r.luts, r.ffs, f"{r.bram36:.1f}")
+            csv_row("total", total.luts,
+                    f"{100*total.luts/XCVU13P.luts:.1f}%_of_xcvu13p",
+                    f"dyn={pw['dynamic_w']:.2f}W", f"static={pw['static_w']:.1f}W",
+                    "FITS" if out[bits]["fits"] else "ROUTING-LIMITED")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

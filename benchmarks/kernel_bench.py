@@ -1,0 +1,56 @@
+"""Kernel micro-bench: lookup GEMM impls vs dense int matmul (wall time
+on CPU is illustrative only; the structural counts are the deliverable).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, timer
+from repro.core.tlmac import compile_layer
+from repro.kernels import ops
+
+
+def run(quiet=False):
+    rng = np.random.default_rng(0)
+    B_w, B_a, G = 3, 3, 4
+    K, N, M = 256, 256, 64
+    w = rng.integers(-4, 4, size=(K, N))
+    plan = compile_layer(w, B_w=B_w, B_a=B_a, G=G, d_p=64, anneal_iters=500)
+    a = jnp.asarray(rng.integers(0, 2**B_a, size=(M, K)))
+    t = jnp.asarray(plan.table)
+    e = jnp.asarray(plan.exec_idx)
+    c = jnp.asarray(plan.step_cluster)
+    out = {}
+    _, us_dense = timer(
+        lambda: ops.dense_int_matmul(a, jnp.asarray(w)).block_until_ready()
+    )
+    out["dense_int"] = us_dense
+    if not quiet:
+        csv_row("impl", "us_per_call")
+        csv_row("dense_int", f"{us_dense:.0f}")
+    _, us_bs = timer(
+        lambda: ops.bitserial_matmul(a, jnp.asarray(w), B_a).block_until_ready()
+    )
+    out["bitserial"] = us_bs
+    if not quiet:
+        csv_row("bitserial_eq3", f"{us_bs:.0f}")
+    for impl in ("xla", "pallas", "pallas-onehot"):
+        _, us = timer(
+            lambda impl=impl: ops.tlmac_matmul(
+                a, t, e, c, B_a=B_a, G=G, N=N, impl=impl
+            ).block_until_ready()
+        )
+        out[impl] = us
+        if not quiet:
+            csv_row(f"tlmac_{impl}", f"{us:.0f}")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""§Perf hillclimbing driver: run one dry-run cell with a config
+override and record the before/after roofline terms.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter \
+        --arch minicpm-2b --shape train_4k \
+        --set pure_fsdp=True --tag minicpm_pure_fsdp
+
+Writes experiments/perf/<tag>.json (baselines stay untouched in
+experiments/dryrun/).
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+
+
+def parse_val(v: str):
+    if v in ("True", "False"):
+        return v == "True"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--set", nargs="*", default=[], help="field=value overrides")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    import repro.launch.dryrun as dr
+    from repro.configs import base as cb
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+
+    # patch the config module so run_cell's get_config sees the override
+    mod_name = cb._ALIASES.get(args.arch, args.arch).replace("-", "_")
+    import importlib
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    orig = mod.CONFIG
+    mod.CONFIG = dataclasses.replace(orig, **overrides)
+
+    res = dr.run_cell(args.arch, args.shape, args.mesh == "multipod")
+    res["overrides"] = overrides
+    res["tag"] = args.tag
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, args.tag + ".json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1, default=str)
+    mem = res.get("memory_analysis", {}).get("total_nonalias_bytes")
+    ana = res.get("analytic", {})
+    print(f"{'OK' if res['ok'] else 'FAIL'} {args.tag}: mem/dev="
+          f"{(mem or 0)/1e9:.1f}GB t_c={ana.get('t_compute_s', 0):.4f} "
+          f"t_m={ana.get('t_memory_s', 0):.4f} t_x={ana.get('t_collective_s', 0):.4f} "
+          f"{res.get('error','')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and prints, per (arch x shape x mesh):
+compute/memory/collective terms (seconds), the dominant bottleneck,
+MODEL_FLOPS = 6ND (2ND serve), the useful-flops ratio, and the per-
+device memory-analysis bytes vs the 16 GB v5e budget.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+HBM_BUDGET = 16e9
+
+
+def load(dryrun_dir="experiments/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        cells.append(json.load(open(path)))
+    return cells
+
+
+def run(dryrun_dir="experiments/dryrun", quiet=False):
+    cells = load(dryrun_dir)
+    rows = []
+    if not quiet:
+        csv_row("arch", "shape", "mesh", "status", "mem_dev_GB", "fits_16GB",
+                "t_compute_s", "t_memory_s", "t_collective_s", "bottleneck",
+                "useful_flops_ratio")
+    for c in cells:
+        if c.get("skipped"):
+            if not quiet:
+                csv_row(c["arch"], c["shape"], c["mesh"], "skipped-by-design",
+                        "-", "-", "-", "-", "-", "-", "-")
+            continue
+        if not c.get("ok"):
+            if not quiet:
+                csv_row(c["arch"], c["shape"], c["mesh"], "FAIL",
+                        "-", "-", "-", "-", "-", "-", "-")
+            continue
+        ana = c["analytic"]
+        mem = c.get("memory_analysis", {}).get("total_nonalias_bytes")
+        row = dict(
+            arch=c["arch"], shape=c["shape"], mesh=c["mesh"],
+            mem_dev=mem, fits=(mem or 0) <= HBM_BUDGET,
+            t_c=ana["t_compute_s"], t_m=ana["t_memory_s"],
+            t_x=ana["t_collective_s"], bn=ana["bottleneck"],
+            ufr=ana["useful_flops_ratio"],
+        )
+        rows.append(row)
+        if not quiet:
+            csv_row(row["arch"], row["shape"], row["mesh"], "ok",
+                    f"{(mem or 0)/1e9:.1f}", row["fits"],
+                    f"{row['t_c']:.4f}", f"{row['t_m']:.4f}",
+                    f"{row['t_x']:.4f}", row["bn"], f"{row['ufr']:.3f}")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

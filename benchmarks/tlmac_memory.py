@@ -1,0 +1,41 @@
+"""Beyond-paper (DESIGN.md §2): TPU memory-side win of TLMAC.
+
+Weight-HBM bytes per decode step for each serve impl (dense bf16 /
+int8 / tlmac codebook-indexed), per assigned arch — the quantity that
+moves the decode roofline's memory term.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch import analytic
+
+
+def run(quiet=False):
+    shape = SHAPES["decode_32k"]
+    if not quiet:
+        csv_row("arch", "dense_GB", "int8_GB", "tlmac_GB", "tlmac_vs_dense")
+    out = {}
+    for arch in list_archs():
+        if arch == "resnet18":
+            continue
+        cfg = get_config(arch)
+        rows = {}
+        for impl in ("dense", "int8", "tlmac"):
+            ana = analytic.analyze(cfg, shape, serve_impl=impl)
+            rows[impl] = ana.detail["weight_bytes"] / 1e9
+        out[arch] = rows
+        if not quiet:
+            csv_row(arch, f"{rows['dense']:.1f}", f"{rows['int8']:.1f}",
+                    f"{rows['tlmac']:.1f}",
+                    f"{rows['dense']/max(rows['tlmac'],1e-9):.2f}x")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

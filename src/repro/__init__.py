@@ -1,0 +1,17 @@
+"""repro — TLMAC (Table-Lookup MAC, FPGA'24) re-targeted to TPU/JAX.
+
+A production-grade JAX training/inference framework whose first-class
+feature is lookup-based processing of quantised neural networks:
+
+- ``repro.core.quant``   — N2UQ / LSQ+ / binary quantisers (QAT + PTQ)
+- ``repro.core.tlmac``   — the paper's compiler: weight-group extraction,
+  spectral clustering of the sequential dimension, simulated-annealing
+  routing reduction, LUT packing, FPGA cost model, and the TPU execution
+  plan (codebook tables + indices)
+- ``repro.kernels``      — Pallas TPU kernels (lookup GEMM, bit-planes)
+- ``repro.models``       — the 10 assigned architectures + ResNet-18
+- ``repro.parallel`` / ``repro.launch`` — multi-pod meshes, dry-run
+- ``repro.train`` / ``repro.serve``     — fault-tolerant loops
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,201 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is a module ``repro/configs/<id>.py`` exposing
+``CONFIG: ArchConfig``; ``get_config(name)`` resolves it.  ``smoke_config``
+derives the reduced same-family config used by CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+from repro.core.quant.quantizers import QuantConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode' | 'long-decode'
+
+
+# The four assigned LM shapes (brief: shapes block).
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "long-decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    # --- attention ---
+    attn_kind: str = "gqa"       # gqa | mla | local | none
+    local_window: int = 2048
+    # mla dims (deepseek-style latent attention)
+    mla_q_lora: int = 1536
+    mla_kv_lora: int = 512
+    mla_rope_dim: int = 64
+    mla_nope_dim: int = 128
+    mla_v_dim: int = 128
+    # --- moe ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_expert: int = 0
+    moe_layer_start: int = 0     # dense layers before MoE starts (DSv3: 3)
+    capacity_factor: float = 1.25
+    # --- hybrid / ssm ---
+    block_pattern: Tuple[str, ...] = ()   # e.g. ('rglru','rglru','attn')
+    conv_width: int = 4
+    lru_dim: Optional[int] = None
+    # --- enc-dec ---
+    n_enc_layers: int = 0
+    # --- vlm / audio frontend stubs ---
+    frontend: str = "none"       # none | patch | frames
+    frontend_len: int = 0        # prepended embedding positions
+    # --- norm / act / misc ---
+    norm: str = "rmsnorm"
+    act: str = "swiglu"
+    tie_embeddings: bool = False
+    qkv_bias: bool = False
+    # --- quantisation (the paper's technique) ---
+    quant: QuantConfig = QuantConfig(w_bits=3, a_bits=3)
+    tlmac_G: int = 4
+    tlmac_dp: int = 128
+    tlmac_narr_cap: int = 4096   # LUT-pool capacity budget for AOT shapes
+    linear_impl: str = "qdq"     # train path: dense | qdq
+    serve_impl: str = "tlmac"    # serve path: dense | int8 | tlmac
+    # --- parallelism defaults ---
+    fsdp: bool = False           # shard params over data axis too (ZeRO-3)
+    pure_fsdp: bool = False      # drop TP: shard params over ALL axes,
+                                 # replicate compute (kills per-layer
+                                 # activation all-reduces; small-d archs)
+    remat: str = "layer"         # none | layer
+    opt_state_dtype: str = "f32" # f32 | bf16 | int8 (8-bit Adam)
+    train_accum: int = 1         # gradient-accumulation microbatches
+    # --- capability flags ---
+    supports_long: bool = False  # sub-quadratic path for long_500k
+    has_decoder: bool = True
+    notes: str = ""
+
+    @property
+    def kv_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model FLOPs)."""
+        d, L, V = self.d_model, self.n_layers, self.vocab
+        hd = self.kv_head_dim
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":  # xlstm
+            per = _xlstm_layer_params(self)
+            return emb + L * per
+        att = _attn_params(self)
+        if self.n_experts:
+            moe_ff = 3 * d * self.d_expert * (self.n_experts + self.n_shared)
+            router = d * self.n_experts
+            dense_ff = 3 * d * self.d_ff if self.d_ff else 3 * d * self.d_expert
+            n_moe = L - self.moe_layer_start
+            ff = self.moe_layer_start * dense_ff + n_moe * (moe_ff + router)
+            return emb + L * att + ff
+        if self.family == "hybrid":
+            n_attn = sum(1 for b in self.block_pattern for _ in [b] if b == "attn")
+            pat_len = max(len(self.block_pattern), 1)
+            n_attn_layers = L * n_attn // pat_len
+            n_rec = L - n_attn_layers
+            rec = _rglru_layer_params(self)
+            return emb + n_attn_layers * att + n_rec * rec + L * 3 * d * self.d_ff
+        ff = 3 * d * self.d_ff if self.act == "swiglu" else 2 * d * self.d_ff
+        enc = self.n_enc_layers * (att + ff + 2 * d * hd * self.n_heads)
+        return emb + L * (att + ff) + enc
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        att = _attn_params(self)
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        act_ff = 3 * d * self.d_expert * (self.top_k + self.n_shared)
+        dense_ff = 3 * d * self.d_ff if self.d_ff else 3 * d * self.d_expert
+        n_moe = L - self.moe_layer_start
+        ff = self.moe_layer_start * dense_ff + n_moe * (act_ff + d * self.n_experts)
+        return emb + L * att + ff
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    d, hd = cfg.d_model, cfg.kv_head_dim
+    if cfg.attn_kind == "mla":
+        q = d * cfg.mla_q_lora + cfg.mla_q_lora * cfg.n_heads * (
+            cfg.mla_nope_dim + cfg.mla_rope_dim
+        )
+        kv = d * (cfg.mla_kv_lora + cfg.mla_rope_dim) + cfg.mla_kv_lora * (
+            cfg.n_heads * (cfg.mla_nope_dim + cfg.mla_v_dim)
+        )
+        o = cfg.n_heads * cfg.mla_v_dim * d
+        return q + kv + o
+    return d * hd * (cfg.n_heads + 2 * cfg.n_kv) + cfg.n_heads * hd * d
+
+
+def _xlstm_layer_params(cfg: ArchConfig) -> int:
+    # mLSTM block: up-proj 2x, q/k/v over 2d inner, gates, down-proj.
+    d = cfg.d_model
+    inner = 2 * d
+    return 2 * d * inner + 3 * inner * inner // 1 + 2 * inner * 1 + inner * d
+
+
+def _rglru_layer_params(cfg: ArchConfig) -> int:
+    d = cfg.d_model
+    lru = cfg.lru_dim or d
+    return 2 * d * lru + lru * cfg.conv_width + 2 * lru + lru * d
+
+
+_REGISTRY = [
+    "xlstm_350m", "codeqwen15_7b", "minicpm_2b", "mistral_large_123b",
+    "command_r_35b", "recurrentgemma_2b", "kimi_k2_1t", "deepseek_v3_671b",
+    "seamless_m4t_medium", "internvl2_76b", "resnet18",
+]
+
+_ALIASES = {
+    "xlstm-350m": "xlstm_350m",
+    "codeqwen1.5-7b": "codeqwen15_7b",
+    "minicpm-2b": "minicpm_2b",
+    "mistral-large-123b": "mistral_large_123b",
+    "command-r-35b": "command_r_35b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "internvl2-76b": "internvl2_76b",
+}
+
+
+def list_archs():
+    return list(_REGISTRY)
+
+
+def get_config(name: str) -> ArchConfig:
+    mod_name = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def smoke_config(name: str) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    mod_name = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE

@@ -1,0 +1,29 @@
+"""minicpm-2b [dense] — llama-like, WSD schedule (arXiv:2404.06395).
+
+40L d_model=2304 36H (kv=36) d_ff=5760 vocab=122753 (padded to 122752+1;
+we keep the odd vocab — embeddings aren't TLMAC'd).  Tied embeddings.
+Its train config uses the WSD schedule from optim/schedules.py.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv=36,
+    d_ff=5760,
+    vocab=122753,
+    tie_embeddings=True,
+    fsdp=True,
+    pure_fsdp=True,
+    notes="WSD LR schedule",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, train_accum=1, pure_fsdp=False, fsdp=False, n_layers=2, d_model=72, n_heads=4, n_kv=4, d_ff=160, vocab=257,
+)

@@ -1,0 +1,28 @@
+"""mistral-large-123b [dense] (hf:mistralai/Mistral-Large-Instruct-2407).
+
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab=32768,
+    fsdp=True,
+    train_accum=8,
+    notes="full attention only: long_500k skipped by design",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, train_accum=1, pure_fsdp=False, n_layers=2, d_model=128, n_heads=8, n_kv=2, head_dim=16,
+    d_ff=256, vocab=256, fsdp=False,
+)

@@ -1,0 +1,13 @@
+"""resnet18 — the paper's own model (N2UQ-quantised ResNet-18, §6.1).
+
+Not part of the assigned LM pool; used by the paper-table benchmarks
+(Table 1, Figures 5/6/8) and the conv TLMAC path.
+"""
+
+from repro.models.resnet import ResNetConfig
+
+CONFIG = ResNetConfig(name="resnet18", w_bits=3, a_bits=3)
+SMOKE = ResNetConfig(
+    name="resnet18-smoke", w_bits=3, a_bits=3, width=16,
+    stages=((16, 1, 1), (32, 1, 2)), num_classes=10, in_hw=16,
+)

@@ -1,0 +1,33 @@
+"""seamless-m4t-medium [audio] — enc-dec, multimodal (arXiv:2308.11596).
+
+12L (decoder) + 12L encoder, d_model=1024 16H (kv=16) d_ff=4096
+vocab=256206.  The speech frontend is a STUB per the brief:
+``input_specs()`` provides precomputed frame embeddings [B, Se, 1024].
+Non-gated GELU FFN.  train_4k splits seq 50/50 between frames and
+target tokens; decode shapes decode the decoder against a cached
+encoder output.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-medium",
+    family="audio",
+    n_layers=12,
+    n_enc_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv=16,
+    d_ff=4096,
+    vocab=256206,
+    act="gelu",
+    frontend="frames",
+    notes="encoder-decoder; frontend stubbed (precomputed frames)",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv=4,
+    d_ff=128, vocab=256,
+)

@@ -1,0 +1,28 @@
+"""xlstm-350m [ssm] — sLSTM + mLSTM blocks (arXiv:2405.04517).
+
+24L d_model=1024 4H d_ff=0 (FFN folded into xLSTM blocks, projection
+factor 2) vocab=50304.  7:1 mLSTM:sLSTM.  Sub-quadratic: long_500k runs.
+"""
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv=4,
+    d_ff=0,
+    vocab=50304,
+    attn_kind="none",
+    supports_long=True,
+    train_accum=8,
+    notes="recurrent; decode cache = mLSTM matrix memories",
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, train_accum=1, pure_fsdp=False, n_layers=8, d_model=64, n_heads=2, vocab=256,
+)

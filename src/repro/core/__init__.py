@@ -1,0 +1,1 @@
+# Core library: the paper's contribution (TLMAC) + quantisation substrate.

@@ -1,0 +1,262 @@
+"""Quantisers used by TLMAC.
+
+The paper consumes *pre-trained quantised models* (N2UQ [20] primarily) and
+maps their integer weights onto lookup tables.  This module provides the
+quantisation substrate:
+
+- ``uniform_quantize``/``uniform_dequantize``: symmetric uniform affine.
+- ``lsq_*``: Learned Step-size Quantisation (LSQ/LSQ+ [6, 11]) — learnable
+  per-tensor (or per-channel) step with the canonical gradient scale.
+- ``n2uq_*``: Nonuniform-to-Uniform Quantisation [20] — learnable input
+  thresholds, uniform output levels, G-STE backward.
+- ``binary_quant``: BNN sign/scale baseline (LUTNet-style comparisons).
+- ``quantize_weights_int`` / ``quantize_acts_int``: PTQ entry points that
+  produce the *integer codes* the TLMAC compiler consumes.
+
+All quantisers are pure functions; learnable state travels in explicit
+parameter pytrees.  Straight-through estimators are built with
+``jax.lax.stop_gradient`` so everything works under ``jax.grad``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static quantisation configuration for one layer family."""
+
+    w_bits: int = 3
+    a_bits: int = 3
+    # Weight codes are signed two's complement: [-2^(B-1), 2^(B-1)-1].
+    # Activation codes are unsigned levels [0, 2^B - 1] (post-quantiser
+    # activations in N2UQ are non-negative uniform levels).
+    per_channel: bool = True
+    # 'n2uq' | 'lsq' | 'uniform' | 'binary'
+    method: str = "n2uq"
+
+    @property
+    def w_qmax(self) -> int:
+        return 2 ** (self.w_bits - 1) - 1
+
+    @property
+    def w_qmin(self) -> int:
+        return -(2 ** (self.w_bits - 1))
+
+    @property
+    def a_qmax(self) -> int:
+        return 2**self.a_bits - 1
+
+
+# ---------------------------------------------------------------------------
+# Uniform symmetric quantisation + STE
+# ---------------------------------------------------------------------------
+
+
+def _round_ste(x: jnp.ndarray) -> jnp.ndarray:
+    """Round with straight-through gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def uniform_quantize(
+    x: jnp.ndarray, scale: jnp.ndarray, qmin: int, qmax: int
+) -> jnp.ndarray:
+    """Real -> integer codes (differentiable via STE)."""
+    q = _round_ste(x / scale)
+    return jnp.clip(q, qmin, qmax)
+
+
+def uniform_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q * scale
+
+
+def fake_quant_weight(w: jnp.ndarray, scale: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Quantise-dequantise weights (QAT forward)."""
+    return uniform_dequantize(uniform_quantize(w, scale, cfg.w_qmin, cfg.w_qmax), scale)
+
+
+def fake_quant_act(a: jnp.ndarray, scale: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    return uniform_dequantize(uniform_quantize(a, scale, 0, cfg.a_qmax), scale)
+
+
+# ---------------------------------------------------------------------------
+# LSQ / LSQ+  (learned step size)
+# ---------------------------------------------------------------------------
+
+
+def lsq_init(w: jnp.ndarray, bits: int, per_channel: bool, signed: bool = True):
+    """Canonical LSQ init: s = 2*mean(|w|)/sqrt(qmax)."""
+    qmax = 2 ** (bits - 1) - 1 if signed else 2**bits - 1
+    if per_channel and w.ndim >= 2:
+        red = tuple(range(w.ndim - 1))
+        s = 2.0 * jnp.mean(jnp.abs(w), axis=red) / jnp.sqrt(qmax)
+    else:
+        s = 2.0 * jnp.mean(jnp.abs(w)) / jnp.sqrt(qmax)
+    return jnp.maximum(s, 1e-9)
+
+
+def _grad_scale(x: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """Scale the gradient flowing into x without changing the value."""
+    return x * scale + jax.lax.stop_gradient(x * (1.0 - scale))
+
+
+def lsq_quant(
+    x: jnp.ndarray,
+    step: jnp.ndarray,
+    bits: int,
+    signed: bool = True,
+    dequant: bool = True,
+) -> jnp.ndarray:
+    """LSQ fake-quant (or codes if dequant=False).
+
+    The step-size gradient is scaled by 1/sqrt(numel*qmax) per the paper.
+    """
+    if signed:
+        qmin, qmax = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    else:
+        qmin, qmax = 0, 2**bits - 1
+    g = 1.0 / jnp.sqrt(float(x.size) * max(qmax, 1))
+    s = _grad_scale(step, g)
+    q = jnp.clip(_round_ste(x / s), qmin, qmax)
+    return q * s if dequant else q
+
+
+# ---------------------------------------------------------------------------
+# N2UQ: Nonuniform-to-Uniform quantisation [20]
+#
+# Activations: learnable thresholds T_1 < ... < T_{2^B-1}; the forward pass
+# counts how many thresholds x exceeds (a non-uniform input grid) and emits
+# *uniform* integer levels 0..2^B-1 scaled by a learnable output step.
+# Backward uses G-STE (generalised straight-through): dq/dx = s_out/Δ_i on
+# interval i, which reduces to scaled pass-through.
+# ---------------------------------------------------------------------------
+
+
+def n2uq_act_init(bits: int, init_range: float = 1.0):
+    """Parameters: threshold *deltas* (softplus-positive) + output step."""
+    n_thresh = 2**bits - 1
+    # Uniform spacing at init: thresholds at (i+0.5)*range/n_levels.
+    deltas = jnp.full((n_thresh,), init_range / n_thresh)
+    out_step = jnp.asarray(init_range / n_thresh)
+    return {"deltas": deltas, "out_step": out_step}
+
+
+def _thresholds_from_deltas(deltas: jnp.ndarray) -> jnp.ndarray:
+    """Strictly increasing thresholds via positive increments."""
+    pos = jax.nn.softplus(deltas) + 1e-6
+    return jnp.cumsum(pos) - 0.5 * pos[0]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _n2uq_count(x, thresholds, out_step, bits):
+    """q = out_step * #(x > T_i)  (uniform output levels)."""
+    q = jnp.sum(
+        (x[..., None] > thresholds).astype(x.dtype), axis=-1
+    )
+    return q * out_step
+
+
+def _n2uq_count_fwd(x, thresholds, out_step, bits):
+    y = _n2uq_count(x, thresholds, out_step, bits)
+    return y, (x, thresholds, out_step)
+
+
+def _n2uq_count_bwd(bits, res, ct):
+    x, thresholds, out_step = res
+    n_levels = 2**bits - 1
+    lo = thresholds[0]
+    hi = thresholds[-1]
+    # G-STE: inside the quantisation range, pass gradient scaled by the
+    # local slope s_out/Δ_i; outside, zero (activations) — we approximate
+    # the per-interval slope with the average slope (stable, as in the
+    # released N2UQ implementation's simplified backward).
+    avg_delta = (hi - lo) / jnp.maximum(n_levels - 1, 1)
+    slope = out_step / jnp.maximum(avg_delta, 1e-6)
+    inside = ((x > lo) & (x < hi)).astype(x.dtype)
+    dx = ct * inside * slope
+    # Threshold gradient: moving T_i down by dT increases q by out_step
+    # for x in a band near T_i (triangular STE surrogate).  Evaluated
+    # one threshold at a time so no [..., n_thresh] tensor is ever
+    # materialised (at production shapes that buffer dominates HBM).
+    band = jnp.maximum(avg_delta, 1e-6)
+    contrib = -ct * out_step / band
+    dthr = []
+    for i in range(n_levels):
+        w_i = jnp.clip(1.0 - jnp.abs(x - thresholds[i]) / band, 0.0, 1.0)
+        dthr.append(jnp.sum(contrib * w_i))
+    dthr = jnp.stack(dthr)
+    # Output-step gradient: y = out_step * count.
+    count = jnp.sum((x[..., None] > thresholds), axis=-1).astype(x.dtype)
+    dstep = jnp.sum(ct * count)
+    return dx, dthr, dstep
+
+
+_n2uq_count.defvjp(_n2uq_count_fwd, _n2uq_count_bwd)
+
+
+def n2uq_act_quant(
+    x: jnp.ndarray, params: dict, bits: int, dequant: bool = True
+) -> jnp.ndarray:
+    """N2UQ activation quantiser. Returns dequantised values or int codes."""
+    thresholds = _thresholds_from_deltas(params["deltas"])
+    y = _n2uq_count(x, thresholds, params["out_step"], bits)
+    if dequant:
+        return y
+    return jnp.round(y / params["out_step"]).astype(jnp.int32)
+
+
+def n2uq_weight_init(w: jnp.ndarray, bits: int, per_channel: bool = True):
+    return {"step": lsq_init(w, bits, per_channel, signed=True)}
+
+
+def n2uq_weight_quant(
+    w: jnp.ndarray, params: dict, bits: int, dequant: bool = True
+) -> jnp.ndarray:
+    """N2UQ weight path = LSQ-style symmetric uniform on weights."""
+    return lsq_quant(w, params["step"], bits, signed=True, dequant=dequant)
+
+
+# ---------------------------------------------------------------------------
+# Binary (BNN) baseline — LUTNet/LogicShrinkage-style comparisons
+# ---------------------------------------------------------------------------
+
+
+def binary_quant(w: jnp.ndarray, dequant: bool = True) -> jnp.ndarray:
+    """sign(w) with per-channel |w| mean scale (XNOR-Net style)."""
+    red = tuple(range(w.ndim - 1)) if w.ndim >= 2 else ()
+    alpha = jnp.mean(jnp.abs(w), axis=red) if red else jnp.mean(jnp.abs(w))
+    sign = jnp.where(w >= 0, 1.0, -1.0)
+    sign = w + jax.lax.stop_gradient(sign - w)  # STE through sign
+    return sign * alpha if dequant else sign
+
+
+# ---------------------------------------------------------------------------
+# PTQ entry points producing integer codes (what the TLMAC compiler eats)
+# ---------------------------------------------------------------------------
+
+
+def quantize_weights_int(w: jnp.ndarray, cfg: QuantConfig, step: Optional[jnp.ndarray] = None):
+    """Real weights -> (int codes, scale). Codes in [w_qmin, w_qmax].
+
+    The returned integer codes are exactly what ends up in LUT truth tables
+    / TPU MAC tables; `scale` is folded into the output dequantisation.
+    """
+    if step is None:
+        step = lsq_init(w, cfg.w_bits, cfg.per_channel, signed=True)
+    q = jnp.clip(jnp.round(w / step), cfg.w_qmin, cfg.w_qmax).astype(jnp.int32)
+    return q, step
+
+
+def quantize_acts_int(a: jnp.ndarray, cfg: QuantConfig, step: Optional[jnp.ndarray] = None):
+    """Real activations -> (unsigned int codes, scale)."""
+    if step is None:
+        hi = jnp.quantile(jnp.abs(a), 0.999)
+        step = jnp.maximum(hi / cfg.a_qmax, 1e-9)
+    q = jnp.clip(jnp.round(a / step), 0, cfg.a_qmax).astype(jnp.int32)
+    return q, step

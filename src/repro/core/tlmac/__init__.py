@@ -1,0 +1,30 @@
+from repro.core.tlmac.groups import (  # noqa: F401
+    WeightGroups,
+    extract_groups_conv,
+    extract_groups_matmul,
+    unique_groups,
+    mac_table,
+)
+from repro.core.tlmac.clustering import spectral_cluster_steps  # noqa: F401
+from repro.core.tlmac.placement import (  # noqa: F401
+    Placement,
+    build_clusters,
+    random_placement,
+    routing_matrix,
+    count_routes,
+)
+from repro.core.tlmac.annealing import anneal_routing, AnnealResult  # noqa: F401
+from repro.core.tlmac.lut import pack_lut_inits, eval_lut_array  # noqa: F401
+from repro.core.tlmac.costmodel import (  # noqa: F401
+    FPGAResources,
+    hybrid_layer_cost,
+    bit_parallel_lut_count,
+    power_estimate,
+    XCVU13P,
+)
+from repro.core.tlmac.compile import (  # noqa: F401
+    TLMACLayerPlan,
+    compile_layer,
+    plan_shapes,
+)
+from repro.core.tlmac.api import TLMACLinear  # noqa: F401

@@ -1,0 +1,101 @@
+"""Composable public API: real weights in, lookup-executing module out.
+
+``TLMACLinear.from_weights`` runs the full paper pipeline (quantise →
+group → cluster → anneal → pack) and yields a callable whose forward is
+the lookup GEMM — drop-in for ``x @ W`` at serve time:
+
+    lin = TLMACLinear.from_weights(w, w_bits=3, a_bits=3, G=4)
+    y = lin(x)                       # bf16, == fake-quant matmul
+    lin.plan.resources.luts          # the FPGA cost report
+    lin.as_serve_params()            # params dict for models/nn.py
+
+Everything heavier (sharded serving, per-arch integration) goes through
+``models/nn.init_serve_linear``; this module is the minimal composable
+entry point (deliverable (a)).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import quantizers as Q
+from repro.core.tlmac.compile import TLMACLayerPlan, compile_layer
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class TLMACLinear:
+    plan: TLMACLayerPlan
+    w_step: jnp.ndarray          # per-tensor or per-channel dequant scale
+    a_step: jnp.ndarray
+    a_bits: int
+    N: int
+    bias: Optional[jnp.ndarray] = None
+
+    @classmethod
+    def from_weights(cls, w, w_bits=3, a_bits=3, G=4, d_p=64,
+                     a_step=None, anneal_iters=2000, seed=0, bias=None):
+        """Quantise a real [K, N] weight matrix and compile it."""
+        w = jnp.asarray(w)
+        cfg = Q.QuantConfig(w_bits=w_bits, a_bits=a_bits, per_channel=False)
+        codes, w_step = Q.quantize_weights_int(w, cfg)
+        plan = compile_layer(
+            np.asarray(codes), B_w=w_bits, B_a=a_bits, G=G, d_p=d_p,
+            anneal_iters=anneal_iters, seed=seed,
+        )
+        if a_step is None:
+            a_step = jnp.float32(1.0)
+        return cls(plan=plan, w_step=w_step, a_step=jnp.asarray(a_step),
+                   a_bits=a_bits, N=w.shape[1], bias=bias)
+
+    def calibrate(self, x_sample):
+        """PTQ activation calibration from a sample batch."""
+        cfg = Q.QuantConfig(a_bits=self.a_bits)
+        _, step = Q.quantize_acts_int(jnp.asarray(x_sample), cfg)
+        self.a_step = step
+        return self
+
+    def __call__(self, x):
+        """x [..., K] -> bf16 [..., N] via the lookup GEMM."""
+        lead = x.shape[:-1]
+        aq = jnp.clip(
+            jnp.round(x.astype(jnp.float32) / self.a_step),
+            0, 2**self.a_bits - 1,
+        ).astype(jnp.int8)
+        yi = kops.tlmac_matmul(
+            aq.reshape(-1, x.shape[-1]),
+            jnp.asarray(self.plan.table),
+            jnp.asarray(self.plan.exec_idx),
+            jnp.asarray(self.plan.step_cluster),
+            B_a=self.a_bits, G=self.plan.G, N=self.N, impl="xla-kscan",
+        )
+        y = (yi * (self.a_step * self.w_step)).astype(jnp.bfloat16)
+        y = y.reshape(*lead, self.N)
+        if self.bias is not None:
+            y = y + self.bias.astype(y.dtype)
+        return y
+
+    def as_serve_params(self):
+        """Params dict consumable by models/nn.serve_linear_apply."""
+        D_s, D_p = self.plan.exec_idx.shape
+        n_tiles = self.N // D_p
+        kg = D_s // n_tiles
+        w_step = jnp.broadcast_to(
+            jnp.asarray(self.w_step, jnp.float32).reshape(-1), (self.N,)
+        ) if jnp.ndim(self.w_step) == 0 else jnp.asarray(self.w_step)
+        return {
+            "table": jnp.asarray(self.plan.table),
+            "exec_idx": jnp.asarray(
+                self.plan.exec_idx.reshape(n_tiles, kg, D_p),
+                jnp.uint8 if self.plan.N_arr <= 256 else jnp.int16,
+            ),
+            "step_cluster": jnp.asarray(
+                self.plan.step_cluster.reshape(n_tiles, kg), jnp.int8
+            ),
+            "w_step": w_step,
+            "a_step": jnp.asarray(self.a_step, jnp.float32),
+        }

@@ -1,0 +1,6 @@
+from repro.kernels.ops import (  # noqa: F401
+    tlmac_matmul,
+    bitserial_matmul,
+    pack_bitplanes,
+    dense_int_matmul,
+)

@@ -1,0 +1,251 @@
+"""Public jit'd kernel API with implementation dispatch.
+
+``impl`` selects the execution path:
+- 'ref'     : obvious jnp oracle (tests, tiny shapes)
+- 'xla'     : memory-bounded XLA formulation — scan over k-group chunks,
+              gather + one-hot MXU contraction.  This is the path the
+              production serve graph lowers (CPU dry-run + TPU alike) and
+              the one the roofline reads.
+- 'pallas'  : the Pallas TPU kernel (interpret=True on CPU); gather='take'
+- 'pallas-onehot' : Pallas kernel with MXU-only addressing
+
+All paths are bit-exact in int32 and are asserted equal in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.bitplanes import pack_bitplanes_pallas
+from repro.kernels.tlmac_gemm import tlmac_gemm
+
+
+def dense_int_matmul(a_codes: jnp.ndarray, w_codes: jnp.ndarray) -> jnp.ndarray:
+    """Dense int8-style GEMM baseline (what a non-lookup QNN would run)."""
+    return _ref.dense_int_matmul_ref(a_codes, w_codes)
+
+
+def bitserial_matmul(a_codes, w_codes, B_a: int) -> jnp.ndarray:
+    """Ablation: Eq. 3 serialisation without the lookup (see ref.py)."""
+    return _ref.bitserial_matmul_ref(a_codes, w_codes, B_a)
+
+
+def pack_bitplanes(
+    a_codes: jnp.ndarray, B_a: int, G: int, impl: str = "ref"
+) -> jnp.ndarray:
+    if impl == "pallas":
+        return pack_bitplanes_pallas(a_codes, B_a=B_a, G=G)
+    return _ref.pack_bitplanes_ref(a_codes, B_a, G)
+
+
+def _rowbase(table, exec_idx, step_cluster, n_tiles, kg):
+    n_arr = table.shape[1]
+    D_p = exec_idx.shape[1]
+    rb = (
+        step_cluster.astype(jnp.int32)[:, None] * n_arr
+        + exec_idx.astype(jnp.int32)
+    )
+    return rb.reshape(n_tiles, kg, D_p)
+
+
+@functools.partial(jax.jit, static_argnames=("B_a", "G", "N", "chunk"))
+def tlmac_matmul_xla_kscan(
+    a_codes: jnp.ndarray,
+    table: jnp.ndarray,
+    exec_idx: jnp.ndarray,
+    step_cluster: jnp.ndarray,
+    *,
+    B_a: int,
+    G: int,
+    N: int,
+    chunk: int = 256,
+) -> jnp.ndarray:
+    """Scan-over-k-chunks lookup GEMM (f32 [M, N] accumulator).
+
+    Preferred for TP-sharded dense layers: the accumulator keeps n_tiles
+    as a sharded tensor dim, so no resharding reshape at the end (the
+    N-tile-scan variant pays an all-to-all there).  The f32 [M, N]
+    buffer is acceptable per matmul at dense sizes; the expert-stacked
+    case (E buffers at once under vmap) uses the N-tile variant.
+    """
+    M, K = a_codes.shape
+    D_s, D_p = exec_idx.shape
+    n_tiles = N // D_p
+    kg = K // G
+    C = 2**G
+
+    codes = _ref.pack_bitplanes_ref(a_codes, B_a, G)
+    t2d = table.reshape(-1, C)
+    rowbase = _rowbase(table, exec_idx, step_cluster, n_tiles, kg)
+
+    chunk = min(chunk, kg)
+    pad_k = (-kg) % chunk
+    R = t2d.shape[0]
+    if pad_k:
+        t2d = jnp.pad(t2d, ((0, 1), (0, 0)))
+        rowbase = jnp.pad(
+            rowbase, ((0, 0), (0, pad_k), (0, 0)), constant_values=R
+        )
+        codes = jnp.pad(codes, ((0, 0), (0, 0), (0, pad_k)))
+    kgp = kg + pad_k
+    nchunks = kgp // chunk
+    codes_s = jnp.moveaxis(codes.reshape(B_a, M, nchunks, chunk), 2, 0)
+    rb_s = jnp.moveaxis(
+        rowbase.reshape(n_tiles, nchunks, chunk, D_p), 1, 0
+    )
+
+    def body(acc, xs):
+        cb, rb = xs
+        t_rows = t2d[rb].astype(jnp.bfloat16)
+        rhs = t_rows.transpose(0, 2, 1, 3).reshape(n_tiles * D_p, chunk * C)
+        for b in range(B_a):
+            sel = jax.nn.one_hot(cb[b], C, dtype=jnp.bfloat16)
+            acc = acc + float(1 << b) * jax.lax.dot_general(
+                sel.reshape(M, chunk * C), rhs,
+                (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ).reshape(M, n_tiles, D_p)
+        return acc, None
+
+    acc0 = jnp.zeros((M, n_tiles, D_p), dtype=jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (codes_s, rb_s))
+    return acc.reshape(M, N)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("B_a", "G", "N", "chunk", "out_dtype")
+)
+def tlmac_matmul_xla(
+    a_codes: jnp.ndarray,
+    table: jnp.ndarray,
+    exec_idx: jnp.ndarray,
+    step_cluster: jnp.ndarray,
+    *,
+    B_a: int,
+    G: int,
+    N: int,
+    chunk: int = 256,
+    out_scale: Optional[jnp.ndarray] = None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Lookup GEMM: outer scan over N-tiles, inner loop over k-chunks.
+
+    Loop order matters for HBM: the f32 accumulator lives per N-tile
+    ([M, D_p] at a time) and each finished tile is dequantised
+    (``out_scale``) and emitted in ``out_dtype`` immediately — a single
+    full-size [M, N] f32 accumulator costs ~8 GB/device per MoE expert
+    stack at 32k-prefill shapes.  bf16 operands are exact here
+    (|table| <= G*2^(B_w-1) <= 48, one-hots are 0/1); accumulation is
+    f32 via preferred_element_type, so the integer result is exact.
+    """
+    M, K = a_codes.shape
+    D_s, D_p = exec_idx.shape
+    n_tiles = N // D_p
+    kg = K // G
+    C = 2**G
+
+    codes = _ref.pack_bitplanes_ref(a_codes, B_a, G)        # [B_a, M, kg]
+    t2d = table.reshape(-1, C)
+    rowbase = _rowbase(table, exec_idx, step_cluster, n_tiles, kg)
+
+    chunk = min(chunk, kg)
+    pad_k = (-kg) % chunk
+    R = t2d.shape[0]
+    if pad_k:
+        t2d = jnp.pad(t2d, ((0, 1), (0, 0)))                 # zero row
+        rowbase = jnp.pad(
+            rowbase, ((0, 0), (0, pad_k), (0, 0)), constant_values=R
+        )
+        codes = jnp.pad(codes, ((0, 0), (0, 0), (0, pad_k)))
+    kgp = kg + pad_k
+    nk = kgp // chunk
+    codes_k = codes.reshape(B_a, M, nk, chunk)
+
+    # The scan must NOT iterate a TP-sharded axis: keep an inner block
+    # of 16 tiles (== the 'model' axis size, guaranteed by _pick_dp for
+    # sharded layers) as a tensor dim and scan the outer factor.
+    nt_in = 16 if n_tiles % 16 == 0 else 1
+    nt_out = n_tiles // nt_in
+    ncol = nt_in * D_p
+    rb_x = rowbase.reshape(nt_out, nt_in, kgp, D_p)
+    scale = (
+        out_scale.reshape(nt_out, nt_in, D_p)
+        if out_scale is not None else jnp.zeros((nt_out, 1, 1))
+    )
+    odt = out_dtype or (jnp.bfloat16 if out_scale is not None else jnp.float32)
+
+    def n_step(_, xs):
+        rb_tile, sc = xs                     # [nt_in, kgp, D_p], [nt_in, D_p]
+        rb_k = rb_tile.reshape(nt_in, nk, chunk, D_p)
+
+        def k_step(i, acc):
+            rb = jax.lax.dynamic_index_in_dim(
+                rb_k, i, axis=1, keepdims=False
+            )                                                # [nt_in, chunk, D_p]
+            t_rows = t2d[rb].astype(jnp.bfloat16)            # [nt_in, chunk, D_p, C]
+            rhs = t_rows.transpose(0, 2, 1, 3).reshape(ncol, chunk * C)
+            cb = jax.lax.dynamic_index_in_dim(
+                codes_k, i, axis=2, keepdims=False
+            )                                                # [B_a, M, chunk]
+            for b in range(B_a):
+                sel = jax.nn.one_hot(cb[b], C, dtype=jnp.bfloat16)
+                acc = acc + float(1 << b) * jax.lax.dot_general(
+                    sel.reshape(M, chunk * C), rhs,
+                    (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )                                            # [M, ncol]
+            return acc
+
+        acc = jax.lax.fori_loop(
+            0, nk, k_step, jnp.zeros((M, ncol), jnp.float32)
+        )
+        if out_scale is not None:
+            acc = acc * sc.reshape(ncol)
+        return None, acc.astype(odt)
+
+    _, ys = jax.lax.scan(n_step, None, (rb_x, scale))        # [nt_out, M, ncol]
+    return ys.transpose(1, 0, 2).reshape(M, N)
+
+
+def tlmac_matmul(
+    a_codes: jnp.ndarray,
+    table: jnp.ndarray,
+    exec_idx: jnp.ndarray,
+    step_cluster: jnp.ndarray,
+    *,
+    B_a: int,
+    G: int,
+    N: int,
+    impl: str = "xla",
+    chunk: int = 256,
+) -> jnp.ndarray:
+    """Lookup-based quantised GEMM: int32 [M, N] == a_codes @ W_codes."""
+    if impl == "ref":
+        return _ref.tlmac_matmul_ref(
+            a_codes, table, exec_idx, step_cluster, B_a, G, N
+        )
+    if impl == "xla":
+        return tlmac_matmul_xla(
+            a_codes, table, exec_idx, step_cluster, B_a=B_a, G=G, N=N, chunk=chunk
+        ).astype(jnp.int32)
+    if impl == "xla-kscan":
+        return tlmac_matmul_xla_kscan(
+            a_codes, table, exec_idx, step_cluster, B_a=B_a, G=G, N=N, chunk=chunk
+        )
+    if impl in ("pallas", "pallas-onehot"):
+        M, K = a_codes.shape
+        kg = K // G
+        n_tiles = N // exec_idx.shape[1]
+        codes = _ref.pack_bitplanes_ref(a_codes, B_a, G)
+        rowbase = _rowbase(table, exec_idx, step_cluster, n_tiles, kg)
+        return tlmac_gemm(
+            codes, rowbase, table.reshape(-1, 2**G),
+            B_a=B_a, G=G, N=N,
+            gather="take" if impl == "pallas" else "onehot",
+        )
+    raise ValueError(f"unknown impl {impl!r}")

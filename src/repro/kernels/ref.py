@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth for correctness: small, obvious, unblocked.
+All integer paths are bit-exact (int32), so tests use array_equal, not
+allclose.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dense_int_matmul_ref(a_codes: jnp.ndarray, w_codes: jnp.ndarray) -> jnp.ndarray:
+    """out[m, n] = sum_k a[m, k] * w[k, n]  in int32."""
+    return jnp.dot(
+        a_codes.astype(jnp.int32),
+        w_codes.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def pack_bitplanes_ref(a_codes: jnp.ndarray, B_a: int, G: int) -> jnp.ndarray:
+    """Activation codes [M, K] -> per-bit-plane group codes [B_a, M, K/G].
+
+    code_b[m, kg] = sum_g bit_b(a[m, kg*G + g]) << g   (paper Eq. 3 inner
+    pattern: the G activation bits presented to a LUT array at plane b).
+    """
+    M, K = a_codes.shape
+    assert K % G == 0
+    a = a_codes.astype(jnp.int32).reshape(M, K // G, G)
+    shifts = jnp.arange(G, dtype=jnp.int32)
+    planes = []
+    for b in range(B_a):
+        bits = (a >> b) & 1
+        planes.append(jnp.sum(bits << shifts, axis=-1).astype(jnp.int8))
+    return jnp.stack(planes)  # [B_a, M, K/G] int8 (codes < 2^G <= 64)
+
+
+def bitserial_matmul_ref(
+    a_codes: jnp.ndarray, w_codes: jnp.ndarray, B_a: int
+) -> jnp.ndarray:
+    """Paper Eq. 3 WITHOUT the lookup: bit-serial binary x int matmuls.
+
+    out = sum_b 2^b (a_bits_b @ W).  The ablation point between dense
+    integer GEMM and TLMAC: same serialisation, no weight-group reuse —
+    weights are read at full width every plane."""
+    out = jnp.zeros((a_codes.shape[0], w_codes.shape[-1]), jnp.int32)
+    a = a_codes.astype(jnp.int32)
+    w = w_codes.astype(jnp.int32)
+    for b in range(B_a):
+        bits = (a >> b) & 1
+        out = out + (jnp.dot(bits, w, preferred_element_type=jnp.int32) << b)
+    return out
+
+
+def tlmac_matmul_ref(
+    a_codes: jnp.ndarray,      # [M, K] uint codes (B_a bits)
+    table: jnp.ndarray,        # [N_clus, N_arr, 2^G] int32
+    exec_idx: jnp.ndarray,     # [D_s, D_p] int (array id)
+    step_cluster: jnp.ndarray, # [D_s] int
+    B_a: int,
+    G: int,
+    N: int,
+) -> jnp.ndarray:
+    """Direct table-lookup evaluation (paper Eq. 3 + Fig. 3 switches).
+
+    out[m, n] = sum_b 2^b sum_kg T[cl[s], e[s, p], code_b[m, kg]]
+    with s = n_tile * (K/G) + kg,  n = n_tile * D_p + p.
+    Bit-exact to dense_int_matmul_ref on the reconstructed weights.
+    """
+    M, K = a_codes.shape
+    D_s, D_p = exec_idx.shape
+    n_tiles = N // D_p
+    kg = K // G
+    assert D_s == n_tiles * kg, (D_s, n_tiles, kg)
+
+    codes = pack_bitplanes_ref(a_codes, B_a, G)  # [B_a, M, kg]
+    n_arr = table.shape[1]
+    t2d = table.reshape(-1, table.shape[-1])     # [N_clus*N_arr, 2^G]
+    rowbase = (
+        step_cluster.astype(jnp.int32)[:, None] * n_arr
+        + exec_idx.astype(jnp.int32)
+    ).reshape(n_tiles, kg, D_p)
+
+    out = jnp.zeros((M, n_tiles, D_p), dtype=jnp.int32)
+    for b in range(B_a):
+        # t_sel[m, nt, k, p] = t2d[rowbase[nt, k, p], codes[b, m, k]]
+        t_rows = t2d[rowbase]                    # [nt, kg, D_p, 2^G]
+        sel = jnp.take_along_axis(
+            t_rows[None],                        # [1, nt, kg, D_p, C]
+            codes[b][:, None, :, None, None],    # [M, 1, kg, 1, 1]
+            axis=-1,
+        )[..., 0]                                # [M, nt, kg, D_p]
+        out = out + (jnp.sum(sel, axis=2) << b)
+    return out.reshape(M, N)

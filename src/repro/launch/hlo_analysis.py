@@ -1,0 +1,195 @@
+"""Post-SPMD HLO analysis: collective bytes + roofline terms.
+
+``compiled.cost_analysis()`` gives HLO FLOPs/bytes but no collective
+traffic; we parse the optimized HLO text, sum operand bytes of every
+collective op, and multiply ops inside while-loop bodies (scan over
+layers / k-chunks) by their trip counts.
+
+Trip counts are not recoverable from HLO text in general, so the
+caller passes ``loop_multiplier`` (e.g. number of scanned layers); we
+detect which computations are while bodies and attribute their ops
+accordingly.  This errs on the side of a *uniform* multiplier for all
+loops — recorded as an approximation in EXPERIMENTS.md §Roofline.
+
+Hardware model (TPU v5e, per chip):
+    peak bf16   197 TFLOP/s      (int8 ~394 TOPS)
+    HBM BW      819 GB/s
+    ICI         ~50 GB/s per link (x4 links usable), DCI across pods
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+PEAK_INT8_OPS = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes in an HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str, loop_multiplier: int = 1) -> CollectiveStats:
+    """Sum output-shape bytes of collective ops in optimized HLO.
+
+    Ops inside computations referenced as while-loop bodies/conditions
+    are multiplied by ``loop_multiplier``.
+    """
+    # map computation name -> its text block
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo_text.splitlines():
+        m = re.match(
+            r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$", line
+        )
+        if m:
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name, cur_lines = m.group(1), []
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name is not None:
+        comps[cur_name] = "\n".join(cur_lines)
+
+    # which computations are while bodies/conditions
+    loop_comps = set()
+    for text in comps.values():
+        for m in re.finditer(r"(?:body|condition)=%?([\w\.\-]+)", text):
+            loop_comps.add(m.group(1))
+    # transitive: computations called from loop bodies
+    changed = True
+    while changed:
+        changed = False
+        for name, text in comps.items():
+            if name in loop_comps:
+                for m in re.finditer(r"(?:to_apply|calls|body|condition)=%?([\w\.\-]+)", text):
+                    if m.group(1) not in loop_comps:
+                        loop_comps.add(m.group(1))
+                        changed = True
+
+    bytes_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for name, text in comps.items():
+        mult = loop_multiplier if name in loop_comps else 1
+        for line in text.splitlines():
+            ls = line.strip()
+            # output type may carry a layout suffix: f32[8,128]{1,0}
+            m = re.match(
+                r"%?[\w\.\-]+\s*=\s*"
+                r"(\([^=]*?\)|[\w\[\],]+(?:\{[\d,]*\})?)\s+([\w\-]+)",
+                ls,
+            )
+            if not m:
+                continue
+            op = m.group(2)
+            kind = None
+            for k in _COLLECTIVES:
+                if op == k or op.startswith(k + "-"):
+                    kind = k
+                    break
+            if kind is None:
+                continue
+            b = _shape_bytes(m.group(1))
+            bytes_by[kind] += b * mult
+            count_by[kind] += mult
+    return CollectiveStats(bytes_by, count_by)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # total HLO flops (all devices)
+    hbm_bytes: float           # total bytes accessed (all devices)
+    collective_bytes: float    # total collective bytes (all devices)
+    n_chips: int
+    model_flops: float = 0.0   # 6*N*D analytic
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.n_chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.n_chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / (self.n_chips * ICI_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        t = {"compute": self.t_compute, "memory": self.t_memory,
+             "collective": self.t_collective}
+        return max(t, key=t.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "n_chips": self.n_chips,
+        }
+
+
+def roofline_from_compiled(
+    compiled, n_chips: int, loop_multiplier: int = 1,
+    model_flops: float = 0.0, hlo_text: Optional[str] = None,
+) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collectives(text, loop_multiplier)
+    return Roofline(
+        flops=flops, hbm_bytes=hbm, collective_bytes=float(coll.total_bytes),
+        n_chips=n_chips, model_flops=model_flops,
+    )

@@ -1,0 +1,58 @@
+"""Serving launcher (batched decode with the TLMAC serve path).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-350m --smoke \
+        --requests 8 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.models import lm
+from repro.serve.loop import Request, ServeLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=128)
+    ap.add_argument("--serve-impl", default=None,
+                    choices=[None, "dense", "int8", "tlmac"])
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.serve_impl:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, serve_impl=args.serve_impl)
+
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    loop = ServeLoop(params, cfg, batch_slots=args.slots, s_max=args.s_max)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, size=rng.integers(4, 17)).astype(
+            np.int32
+        )
+        loop.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.max_new))
+
+    t0 = time.perf_counter()
+    done = loop.run()
+    dt = time.perf_counter() - t0
+    total_new = sum(len(r.output) for r in done)
+    print(f"served {len(done)} requests, {total_new} tokens, "
+          f"{dt:.2f}s ({total_new / max(dt, 1e-9):.1f} tok/s, impl={cfg.serve_impl})")
+    for r in done[:4]:
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.output[:8]}...")
+
+
+if __name__ == "__main__":
+    main()

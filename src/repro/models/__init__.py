@@ -1,0 +1,1 @@
+from repro.models import nn, attention, moe, xlstm, rglru, lm, resnet  # noqa: F401

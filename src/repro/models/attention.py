@@ -1,0 +1,324 @@
+"""Attention variants: GQA, MLA (DeepSeek latent attention), local
+sliding-window.  Train (full-sequence causal) + decode (KV cache) forms.
+
+Head layout: q [B, S, H, hd]; kv [B, S, KV, hd]; heads sharded on 'model'.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import nn
+
+NEG_INF = -1e30
+
+
+def init_gqa(key, cfg, linear_init=nn.init_linear):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.kv_head_dim
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wq"], a["wq"] = linear_init(ks[0], d, H * hd, cfg, use_bias=cfg.qkv_bias)
+    p["wk"], a["wk"] = linear_init(ks[1], d, KV * hd, cfg, use_bias=cfg.qkv_bias)
+    p["wv"], a["wv"] = linear_init(ks[2], d, KV * hd, cfg, use_bias=cfg.qkv_bias)
+    p["wo"], a["wo"] = linear_init(ks[3], H * hd, d, cfg, shard=("model", None))
+    return p, a
+
+
+def _qkv(params, x, cfg, apply_fn):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.kv_head_dim
+    q = apply_fn(params["wq"], x, cfg, use_bias=cfg.qkv_bias).reshape(B, S, H, hd)
+    k = apply_fn(params["wk"], x, cfg, use_bias=cfg.qkv_bias).reshape(B, S, KV, hd)
+    v = apply_fn(params["wv"], x, cfg, use_bias=cfg.qkv_bias).reshape(B, S, KV, hd)
+    return q, k, v
+
+
+FLASH_THRESHOLD = 1024 * 1024  # switch to blocked attention at/above this
+FLASH_QB = 512
+FLASH_KB = 1024
+
+
+def _sdpa_direct(q, k, v, mask, scale):
+    B, Sq, KV, rep, dk = q.shape
+    dv = v.shape[-1]
+    scores = jnp.einsum(
+        "bqkrh,bskh->bkrqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrqs,bskh->bkrqh", w, v.astype(jnp.float32))
+    return out  # [B, KV, rep, Sq, dv]
+
+
+def _flash(q, k, v, scale, causal: bool, window, qb: int, kb: int):
+    """Blocked online-softmax attention (FlashAttention-style, pure lax).
+
+    q [B,Sq,KV,rep,dk]; k [B,Sk,KV,dk]; v [B,Sk,KV,dv].
+    Never materialises more than a [.., qb, kb] score tile — the memory
+    property that makes 32k prefill fit the dry-run budget.
+    """
+    B, Sq, KV, rep, dk = q.shape
+    Sk, dv = k.shape[1], v.shape[-1]
+    pad_q = (-Sq) % qb
+    pad_k = (-Sk) % kb
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = (Sq + pad_q) // qb, (Sk + pad_k) // kb
+    qs = jnp.moveaxis(qp.reshape(B, nq, qb, KV, rep, dk), 1, 0)
+    ks = jnp.moveaxis(kp.reshape(B, nk, kb, KV, dk), 1, 0)
+    vs = jnp.moveaxis(vp.reshape(B, nk, kb, KV, dv), 1, 0)
+    offset = Sk - Sq  # causal alignment (q position i attends <= i+offset)
+
+    def q_block(qi_and_q):
+        qi, qblk = qi_and_q  # [B, qb, KV, rep, dk]
+        q32 = qblk.astype(jnp.float32)
+
+        def k_step(carry, ki_and_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_and_kv
+            s = jnp.einsum(
+                "bqkrh,bskh->bkrqs", q32, kblk.astype(jnp.float32)
+            ) * scale                                     # [B,KV,rep,qb,kb]
+            iq = qi * qb + jnp.arange(qb)[:, None] + offset
+            ik = ki * kb + jnp.arange(kb)[None, :]
+            msk = ik < Sk
+            if causal:
+                msk = msk & (ik <= iq)
+            if window is not None:
+                msk = msk & (ik > iq - window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkrqs,bskh->bkrqh", p, vblk.astype(jnp.float32)
+            )
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, rep, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, qb, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)              # [B, qb, KV, rep, dv]
+
+    outs = jax.lax.map(jax.checkpoint(q_block), (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq + pad_q, KV, rep, dv)
+    return out[:, :Sq].transpose(0, 2, 3, 1, 4)          # [B,KV,rep,Sq,dv]
+
+
+def sdpa(q, k, v, cfg, causal=True, window=None, mask=None):
+    """Dispatching attention: q [B,Sq,H,dk]; k [B,Sk,KV,dk]; v [..,dv].
+
+    Large Sq*Sk uses the blocked flash path (causal/window masks only);
+    small shapes (train smoke, decode) use the direct masked form.
+    """
+    B, Sq, H, dk = q.shape
+    KV = k.shape[2]
+    Sk = k.shape[1]
+    rep = H // KV
+    dv = v.shape[-1]
+    qg = q.reshape(B, Sq, KV, rep, dk)
+    scale = 1.0 / math.sqrt(dk)
+    if Sq * Sk >= FLASH_THRESHOLD and mask is None:
+        out = _flash(qg, k, v, scale, causal, window, FLASH_QB, FLASH_KB)
+    else:
+        if mask is None:
+            mask = causal_mask(Sq, Sk, window) if causal else jnp.ones(
+                (Sq, Sk), bool
+            )
+        out = _sdpa_direct(qg, k, v, mask, scale)
+    # both paths return [B, KV, rep, Sq, dv]
+    out = out.transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Sq, H * dv).astype(q.dtype)
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """Legacy fixed-mask entry (decode paths): q [B,Sq,H,hd]."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, hd)
+    scale = 1.0 / math.sqrt(hd)
+    out = _sdpa_direct(qg, k, v, mask, scale)
+    # out [B,KV,rep,Sq,dv] -> [B,Sq,H,dv]
+    dv = v.shape[-1]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def causal_mask(Sq: int, Sk: int, window: Optional[int] = None):
+    i = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    j = jnp.arange(Sk)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= j > i - window
+    return m  # [Sq, Sk] broadcast over [B, KV, rep, ...]
+
+
+def gqa_train(params, x, cfg, positions=None, window: Optional[int] = None,
+              apply_fn=nn.linear_apply, cross_kv=None):
+    """Full-sequence attention. ``cross_kv=(k, v)`` switches to cross-attn."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, x, cfg, apply_fn)
+    if cross_kv is not None:
+        k, v = cross_kv
+        causal = False
+    else:
+        causal = True
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        sin, cos = nn.rotary_embedding(positions, cfg.kv_head_dim)
+        q = nn.apply_rotary(q, sin, cos)
+        k = nn.apply_rotary(k, sin, cos)
+    out = sdpa(q, k, v, cfg, causal=causal, window=window)
+    return apply_fn(params["wo"], out, cfg), (k, v)
+
+
+def gqa_decode(params, x, cfg, cache, pos, window: Optional[int] = None,
+               apply_fn=nn.linear_apply, cross_kv=None):
+    """Single-token decode. cache = (k_cache, v_cache) [B, S_max, KV, hd];
+    ``pos`` scalar int32 current position. Returns (y, new_cache)."""
+    B = x.shape[0]
+    q, k, v = _qkv(params, x, cfg, apply_fn)  # S == 1
+    if cross_kv is not None:
+        kc, vc = cross_kv
+        mask = jnp.ones((1, kc.shape[1]), bool)
+        new_cache = cache
+    else:
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        sin, cos = nn.rotary_embedding(positions, cfg.kv_head_dim)
+        q = nn.apply_rotary(q, sin, cos)
+        k = nn.apply_rotary(k, sin, cos)
+        kc, vc = cache
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 1)
+        S_max = kc.shape[1]
+        j = jnp.arange(S_max)[None, :]
+        mask = j <= pos
+        if window is not None:
+            mask &= j > pos - window
+        new_cache = (kc, vc)
+    out = _sdpa(q, kc, vc, mask, cfg)
+    H, hd = cfg.n_heads, cfg.kv_head_dim
+    y = apply_fn(params["wo"], out.reshape(B, 1, H * hd), cfg)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V3 / Kimi-K2)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg, linear_init=nn.init_linear):
+    d, H = cfg.d_model, cfg.n_heads
+    ql, kvl = cfg.mla_q_lora, cfg.mla_kv_lora
+    nod, rod, vd = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["wq_a"], a["wq_a"] = linear_init(ks[0], d, ql, cfg, shard=(None, None))
+    p["q_norm"], a["q_norm"] = nn.init_rmsnorm(ql)
+    p["wq_b"], a["wq_b"] = linear_init(ks[1], ql, H * (nod + rod), cfg)
+    p["wkv_a"], a["wkv_a"] = linear_init(ks[2], d, kvl + rod, cfg, shard=(None, None))
+    p["kv_norm"], a["kv_norm"] = nn.init_rmsnorm(kvl)
+    # wkv_b stays dense: decode absorbs its raw matrix into the latent
+    # attention (no lookup form exists for weight-against-weight matmuls).
+    cfg_dense = dataclasses.replace(cfg, serve_impl="dense")
+    p["wkv_b"], a["wkv_b"] = linear_init(ks[3], kvl, H * (nod + vd), cfg_dense)
+    p["wo"], a["wo"] = linear_init(ks[4], H * vd, d, cfg, shard=("model", None))
+    return p, a
+
+
+def mla_train(params, x, cfg, positions=None, apply_fn=nn.linear_apply, **_):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    nod, rod, vd = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    kvl = cfg.mla_kv_lora
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+
+    q = apply_fn(params["wq_b"],
+                 nn.rmsnorm_apply(params["q_norm"],
+                                  apply_fn(params["wq_a"], x, cfg)), cfg)
+    q = q.reshape(B, S, H, nod + rod)
+    q_nope, q_rope = q[..., :nod], q[..., nod:]
+
+    kv = apply_fn(params["wkv_a"], x, cfg)
+    c_kv, k_rope = kv[..., :kvl], kv[..., kvl:]
+    c_kv = nn.rmsnorm_apply(params["kv_norm"], c_kv)
+    kvu = apply_fn(params["wkv_b"], c_kv, cfg).reshape(B, S, H, nod + vd)
+    k_nope, v = kvu[..., :nod], kvu[..., nod:]
+
+    sin, cos = nn.rotary_embedding(positions, rod)
+    q_rope = nn.apply_rotary(q_rope, sin, cos)
+    k_rope = nn.apply_rotary(k_rope[:, :, None, :], sin, cos)  # shared head
+
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, rod))], axis=-1
+    )
+    out = sdpa(qf, kf, v, cfg, causal=True)   # KV == H (rep = 1)
+    y = apply_fn(params["wo"], out, cfg)
+    # cache for decode: compressed latents only (the MLA memory win)
+    return y, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(params, x, cfg, cache, pos, apply_fn=nn.linear_apply, **_):
+    """Absorbed-matmul MLA decode: attention runs in the latent space, so
+    per-step compute is O(S * kv_lora), never reconstructing full K/V."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    nod, rod, vd = cfg.mla_nope_dim, cfg.mla_rope_dim, cfg.mla_v_dim
+    kvl = cfg.mla_kv_lora
+
+    q = apply_fn(params["wq_b"],
+                 nn.rmsnorm_apply(params["q_norm"],
+                                  apply_fn(params["wq_a"], x, cfg)), cfg)
+    q = q.reshape(B, 1, H, nod + rod)
+    q_nope, q_rope = q[..., :nod], q[..., nod:]
+
+    kv = apply_fn(params["wkv_a"], x, cfg)
+    c_new, kr_new = kv[..., :kvl], kv[..., kvl:]
+    c_new = nn.rmsnorm_apply(params["kv_norm"], c_new)
+
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    sin, cos = nn.rotary_embedding(positions, rod)
+    q_rope = nn.apply_rotary(q_rope, sin, cos)
+    kr_new = nn.apply_rotary(kr_new[:, :, None, :], sin, cos)[:, :, 0, :]
+
+    c_cache, kr_cache = cache
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_cache, c_new.astype(c_cache.dtype), pos, 1
+    )
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache, kr_new.astype(kr_cache.dtype), pos, 1
+    )
+    S_max = c_cache.shape[1]
+
+    # absorb W_uk into q: q_eff [B,1,H,kvl]
+    w_kv_b = params["wkv_b"]["w"].reshape(kvl, H, nod + vd)
+    w_uk = w_kv_b[..., :nod]                     # [kvl, H, nod]
+    w_uv = w_kv_b[..., nod:]                     # [kvl, H, vd]
+    q_eff = jnp.einsum("bqhn,chn->bqhc", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scores = (
+        jnp.einsum("bqhc,bsc->bhqs", q_eff, c_cache.astype(jnp.float32))
+        + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                     kr_cache.astype(jnp.float32))
+    ) / jnp.sqrt(nod + rod)
+    mask = (jnp.arange(S_max) <= pos)[None, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out_c = jnp.einsum("bhqs,bsc->bqhc", w, c_cache.astype(jnp.float32))
+    out = jnp.einsum("bqhc,chv->bqhv", out_c, w_uv.astype(jnp.float32))
+    y = apply_fn(params["wo"], out.reshape(B, 1, H * vd).astype(x.dtype), cfg)
+    return y, (c_cache, kr_cache)

@@ -1,0 +1,666 @@
+"""LM backbone: segment-structured layer stack covering all assigned
+architectures (dense / MoE / xLSTM / RG-LRU hybrid / enc-dec / VLM-stub).
+
+A model is a list of *segments*; each segment is a repeating pattern of
+block kinds (e.g. ``('rglru','rglru','attn_local')``) whose parameters
+are stacked over repetitions and executed with ``jax.lax.scan`` — one
+trace per distinct pattern regardless of depth (critical for compiling
+61-layer 1T-param configs).  Hybrid remainders (26 = 8*3 + 2) become a
+trailing partial segment.
+
+Block kinds:
+    attn        self-attention (gqa|mla per cfg) + dense FFN
+    attn_moe    self-attention + MoE FFN
+    attn_local  sliding-window attention + dense FFN
+    mlstm/slstm xLSTM blocks (FFN folded inside, d_ff = 0)
+    rglru       RG-LRU temporal block + dense FFN
+    enc_attn    bidirectional encoder block
+    dec_cross   decoder block with cross-attention (enc-dec)
+
+Execution paths:
+    forward(..., train=True)  — full-sequence training forward + CE loss
+    prefill(...)              — serve-path full sequence, returns caches
+    decode_step(...)          — one token, KV/recurrent caches
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import shard_hint
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import nn, rglru, xlstm
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    pattern: Tuple[str, ...]
+    n: int
+
+
+def segments_for(cfg) -> List[Segment]:
+    L = cfg.n_layers
+    if cfg.family == "moe":
+        segs = []
+        if cfg.moe_layer_start:
+            segs.append(Segment(("attn",), cfg.moe_layer_start))
+        segs.append(Segment(("attn_moe",), L - cfg.moe_layer_start))
+        return segs
+    if cfg.family == "ssm":  # xlstm 7:1
+        pat = ("mlstm",) * 7 + ("slstm",)
+        segs = [Segment(pat, L // 8)]
+        if L % 8:
+            segs.append(Segment(("mlstm",) * (L % 8), 1))
+        return segs
+    if cfg.family == "hybrid":  # recurrentgemma (rec, rec, attn_local)
+        pat = cfg.block_pattern or ("rglru", "rglru", "attn_local")
+        segs = [Segment(tuple(pat), L // len(pat))]
+        rem = L % len(pat)
+        if rem:
+            segs.append(Segment(tuple(pat[:rem]), 1))
+        return segs
+    if cfg.family == "audio":  # enc-dec decoder side
+        return [Segment(("dec_cross",), L)]
+    return [Segment(("attn",), L)]  # dense / vlm backbone
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg, linear_init):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["wi"], a["wi"] = linear_init(ks[0], d, f, cfg)
+    if cfg.act == "swiglu":
+        p["wg"], a["wg"] = linear_init(ks[1], d, f, cfg)
+    p["wo"], a["wo"] = linear_init(ks[2], f, d, cfg, shard=("model", None))
+    return p, a
+
+
+def ffn_apply(params, x, cfg, apply_fn):
+    h = apply_fn(params["wi"], x, cfg)
+    if "wg" in params:
+        h = h * jax.nn.silu(apply_fn(params["wg"], x, cfg))
+    else:
+        h = jax.nn.gelu(h)
+    return apply_fn(params["wo"], h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _attn_init(cfg):
+    return attn.init_mla if cfg.attn_kind == "mla" else attn.init_gqa
+
+
+def init_block(key, kind: str, cfg, linear_init):
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["norm1"], a["norm1"] = nn.init_rmsnorm(cfg.d_model)
+    if kind in ("attn", "attn_moe", "attn_local", "enc_attn", "dec_cross"):
+        p["attn"], a["attn"] = _attn_init(cfg)(ks[0], cfg, linear_init)
+        p["norm2"], a["norm2"] = nn.init_rmsnorm(cfg.d_model)
+        if kind == "attn_moe":
+            p["moe"], a["moe"] = moe_mod.init_moe(ks[1], cfg, linear_init)
+        else:
+            p["ffn"], a["ffn"] = init_ffn(ks[1], cfg, linear_init)
+        if kind == "dec_cross":
+            p["xattn"], a["xattn"] = attn.init_gqa(ks[2], cfg, linear_init)
+            p["norm3"], a["norm3"] = nn.init_rmsnorm(cfg.d_model)
+    elif kind == "mlstm":
+        p["cell"], a["cell"] = xlstm.init_mlstm(ks[0], cfg, linear_init)
+    elif kind == "slstm":
+        p["cell"], a["cell"] = xlstm.init_slstm(ks[0], cfg, linear_init)
+    elif kind == "rglru":
+        p["cell"], a["cell"] = rglru.init_rglru_block(ks[0], cfg, linear_init)
+        p["norm2"], a["norm2"] = nn.init_rmsnorm(cfg.d_model)
+        p["ffn"], a["ffn"] = init_ffn(ks[1], cfg, linear_init)
+    else:
+        raise ValueError(kind)
+    return p, a
+
+
+def zero_cache(kind: str, cfg, B: int, S_max: int, enc_len: int = 0):
+    """Decode cache for one block of the given kind."""
+    KV, hd = cfg.n_kv, cfg.kv_head_dim
+    dt = jnp.bfloat16
+    if kind in ("attn", "attn_moe"):
+        if cfg.attn_kind == "mla":
+            return {
+                "ckv": jnp.zeros((B, S_max, cfg.mla_kv_lora), dt),
+                "kr": jnp.zeros((B, S_max, cfg.mla_rope_dim), dt),
+            }
+        return {
+            "k": jnp.zeros((B, S_max, KV, hd), dt),
+            "v": jnp.zeros((B, S_max, KV, hd), dt),
+        }
+    if kind == "attn_local":
+        W = min(cfg.local_window, S_max)
+        return {
+            "k": jnp.zeros((B, W, KV, hd), dt),
+            "v": jnp.zeros((B, W, KV, hd), dt),
+        }
+    if kind == "dec_cross":
+        return {
+            "k": jnp.zeros((B, S_max, KV, hd), dt),
+            "v": jnp.zeros((B, S_max, KV, hd), dt),
+            "xk": jnp.zeros((B, enc_len, KV, hd), dt),
+            "xv": jnp.zeros((B, enc_len, KV, hd), dt),
+        }
+    if kind == "mlstm":
+        inner = 2 * cfg.d_model
+        return xlstm.mlstm_zero_state(
+            B, cfg.n_heads, inner // cfg.n_heads, cfg.conv_width
+        )
+    if kind == "slstm":
+        return xlstm.slstm_zero_state(B, cfg.d_model)
+    if kind == "rglru":
+        return rglru.rglru_zero_state(
+            B, cfg.lru_dim or cfg.d_model, cfg.conv_width
+        )
+    raise ValueError(kind)
+
+
+def cache_axes(kind: str, cfg):
+    """PartitionSpecs for a block cache.
+
+    KV heads shard on 'model' when they divide the axis (16); otherwise
+    the *sequence* dim of the cache shards (FlashDecoding-style — the
+    decode attention reduction then runs distributed over S shards)."""
+    from repro.models.nn import MODEL_AXIS
+
+    b = ("pod", "data")
+    if kind in ("attn", "attn_moe") and cfg.attn_kind == "mla":
+        return {"ckv": P(b, "model", None), "kr": P(b, "model", None)}
+    if kind in ("attn", "attn_moe", "attn_local", "dec_cross"):
+        if cfg.n_kv % MODEL_AXIS == 0:
+            s = P(b, None, "model", None)
+        else:
+            s = P(b, "model", None, None)  # shard the sequence dim
+        out = {"k": s, "v": s}
+        if kind == "dec_cross":
+            out["xk"] = out["xv"] = s
+        return out
+    if kind == "mlstm":
+        hd = 2 * cfg.d_model // cfg.n_heads
+        h_ok = cfg.n_heads % MODEL_AXIS == 0
+        return {
+            "C": P(b, "model", None, None) if h_ok else P(b, None, "model", None),
+            "n": P(b, "model", None) if h_ok else P(b, None, "model"),
+            "m": P(b, "model") if h_ok else P(b, None),
+            "conv": P(b, None, "model"),
+        }
+    if kind == "slstm":
+        z = P(b, "model")
+        return {"c": z, "n": z, "h": z, "m": z}
+    if kind == "rglru":
+        return {"h": P(b, "model"), "conv": P(b, None, "model")}
+    raise ValueError(kind)
+
+
+def apply_block(
+    kind: str,
+    params,
+    x,
+    cfg,
+    apply_fn,
+    cache=None,
+    pos=None,
+    enc_out=None,
+    decode: bool = False,
+):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = nn.rmsnorm_apply(params["norm1"], x)
+
+    if kind in ("attn", "attn_moe", "attn_local", "enc_attn", "dec_cross"):
+        window = cfg.local_window if kind == "attn_local" else None
+        is_mla = cfg.attn_kind == "mla"
+        new_cache = cache
+        if decode:
+            if is_mla:
+                y, (ckv, kr) = attn.mla_decode(
+                    params["attn"], h, cfg, (cache["ckv"], cache["kr"]), pos,
+                    apply_fn=apply_fn,
+                )
+                new_cache = dict(cache, ckv=ckv, kr=kr)
+            elif kind == "attn_local":
+                W = cache["k"].shape[1]
+                slot = pos % W
+                y, (kc, vc) = _local_decode(
+                    params["attn"], h, cfg, cache, pos, slot, apply_fn
+                )
+                new_cache = dict(cache, k=kc, v=vc)
+            else:
+                y, (kc, vc) = attn.gqa_decode(
+                    params["attn"], h, cfg, (cache["k"], cache["v"]), pos,
+                    apply_fn=apply_fn,
+                )
+                new_cache = dict(cache, k=kc, v=vc)
+        else:
+            if kind == "enc_attn":
+                y, kv = _bidir_attn(params["attn"], h, cfg, apply_fn)
+            else:
+                fwd = attn.mla_train if is_mla else attn.gqa_train
+                y, kv = fwd(params["attn"], h, cfg, window=window, apply_fn=apply_fn)
+            if cache is not None:  # prefill: store the cache
+                new_cache = _store_prefill(kind, cfg, cache, kv)
+        x = x + y
+
+        if kind == "dec_cross":
+            h2 = nn.rmsnorm_apply(params["norm3"], x)
+            if decode:
+                y2, _ = attn.gqa_decode(
+                    params["xattn"], h2, cfg, None, pos, apply_fn=apply_fn,
+                    cross_kv=(cache["xk"], cache["xv"]),
+                )
+            else:
+                xk, xv = _cross_kv(params["xattn"], enc_out, cfg, apply_fn)
+                y2, _ = attn.gqa_train(
+                    params["xattn"], h2, cfg, apply_fn=apply_fn, cross_kv=(xk, xv)
+                )
+                if cache is not None:
+                    new_cache = dict(new_cache, xk=xk.astype(jnp.bfloat16),
+                                     xv=xv.astype(jnp.bfloat16))
+            x = x + y2
+
+        hf = nn.rmsnorm_apply(params["norm2"], x)
+        if kind == "attn_moe":
+            y, aux = moe_mod.moe_apply(params["moe"], hf, cfg, apply_fn=apply_fn)
+        else:
+            y = ffn_apply(params["ffn"], hf, cfg, apply_fn)
+        return x + y, new_cache, aux
+
+    if kind in ("mlstm", "slstm"):
+        fn = xlstm.mlstm_apply if kind == "mlstm" else xlstm.slstm_apply
+        y, state = fn(params["cell"], h, cfg, state=cache, apply_fn=apply_fn)
+        return x + y, state, aux
+
+    if kind == "rglru":
+        y, state = rglru.rglru_block_apply(
+            params["cell"], h, cfg, state=cache, apply_fn=apply_fn
+        )
+        x = x + y
+        hf = nn.rmsnorm_apply(params["norm2"], x)
+        return x + ffn_apply(params["ffn"], hf, cfg, apply_fn), state, aux
+
+    raise ValueError(kind)
+
+
+def _bidir_attn(params, h, cfg, apply_fn):
+    B, S, _ = h.shape
+    q, k, v = attn._qkv(params, h, cfg, apply_fn)
+    positions = jnp.arange(S)[None, :]
+    sin, cos = nn.rotary_embedding(positions, cfg.kv_head_dim)
+    q = nn.apply_rotary(q, sin, cos)
+    k = nn.apply_rotary(k, sin, cos)
+    mask = jnp.ones((S, S), bool)
+    out = attn._sdpa(q, k, v, mask, cfg)
+    y = apply_fn(params["wo"], out.reshape(B, S, -1), cfg)
+    return y, (k, v)
+
+
+def _cross_kv(params, enc_out, cfg, apply_fn):
+    B, Se, _ = enc_out.shape
+    KV, hd = cfg.n_kv, cfg.kv_head_dim
+    k = apply_fn(params["wk"], enc_out, cfg, use_bias=cfg.qkv_bias).reshape(
+        B, Se, KV, hd
+    )
+    v = apply_fn(params["wv"], enc_out, cfg, use_bias=cfg.qkv_bias).reshape(
+        B, Se, KV, hd
+    )
+    return k, v
+
+
+def _store_prefill(kind, cfg, cache, kv):
+    if cfg.attn_kind == "mla" and kind in ("attn", "attn_moe"):
+        ckv, kr = kv
+        S = ckv.shape[1]
+        return dict(
+            cache,
+            ckv=jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, 1
+            ),
+            kr=jax.lax.dynamic_update_slice_in_dim(
+                cache["kr"], kr.astype(cache["kr"].dtype), 0, 1
+            ),
+        )
+    k, v = kv
+    if kind == "attn_local":
+        W = cache["k"].shape[1]
+        k, v = k[:, -W:], v[:, -W:]
+        pad = W - k.shape[1]
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return dict(cache, k=k.astype(cache["k"].dtype), v=v.astype(cache["v"].dtype))
+    return dict(
+        cache,
+        k=jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, 1
+        ),
+        v=jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, 1
+        ),
+    )
+
+
+def _local_decode(params, h, cfg, cache, pos, slot, apply_fn):
+    """Ring-buffer sliding-window decode."""
+    B = h.shape[0]
+    q, k, v = attn._qkv(params, h, cfg, apply_fn)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    sin, cos = nn.rotary_embedding(positions, cfg.kv_head_dim)
+    q = nn.apply_rotary(q, sin, cos)
+    k = nn.apply_rotary(k, sin, cos)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, 1
+    )
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, 1
+    )
+    W = kc.shape[1]
+    j = jnp.arange(W)[None, :]
+    mask = j <= pos  # all slots valid after warm-up; rotary is absolute
+    out = attn._sdpa(q, kc, vc, mask, cfg)
+    y = apply_fn(params["wo"], out.reshape(B, 1, -1), cfg)
+    return y, (kc, vc)
+
+
+# ---------------------------------------------------------------------------
+# Whole model
+# ---------------------------------------------------------------------------
+
+
+def _linear_init_for(purpose: str):
+    return nn.init_serve_linear if purpose == "serve" else nn.init_linear
+
+
+def _apply_fn_for(purpose: str):
+    return nn.serve_linear_apply if purpose == "serve" else nn.linear_apply
+
+
+def init_lm(key, cfg, purpose: str = "train"):
+    """Returns (params, axes). ``purpose`` in {'train', 'serve'}."""
+    linear_init = _linear_init_for(purpose)
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["embed"], a["embed"] = nn.init_embedding(ks[0], cfg.vocab, cfg.d_model, cfg)
+    if not cfg.tie_embeddings:
+        p["head"], a["head"] = nn.init_embedding(ks[1], cfg.vocab, cfg.d_model, cfg)
+    if cfg.frontend != "none":
+        d_front = 1024 if cfg.frontend == "frames" else 1152
+        p["front"], a["front"] = nn.init_linear(
+            ks[2], d_front, cfg.d_model, cfg, shard=(None, None)
+        )
+    p["final_norm"], a["final_norm"] = nn.init_rmsnorm(cfg.d_model)
+
+    if cfg.n_enc_layers:
+        enc_seg = Segment(("enc_attn",), cfg.n_enc_layers)
+        p["encoder"], a["encoder"] = _init_segments(ks[3], [enc_seg], cfg, linear_init)
+        p["enc_norm"], a["enc_norm"] = nn.init_rmsnorm(cfg.d_model)
+
+    segs = segments_for(cfg)
+    p["segments"], a["segments"] = _init_segments(ks[4], segs, cfg, linear_init)
+    return p, a
+
+
+def _init_segments(key, segs: List[Segment], cfg, linear_init):
+    ps, as_ = [], []
+    for si, seg in enumerate(segs):
+        kseg = jax.random.fold_in(key, si)
+        holder = {}
+
+        def one(k, _seg=seg, _holder=holder):
+            pp, aa = {}, {}
+            for bi, kind in enumerate(_seg.pattern):
+                pp[f"b{bi}"], aa[f"b{bi}"] = init_block(
+                    jax.random.fold_in(k, bi), kind, cfg, linear_init
+                )
+            _holder["axes"] = aa   # captured during tracing (pure Python)
+            return pp
+
+        stacked = jax.vmap(one)(jax.random.split(kseg, seg.n))
+        axes = jax.tree.map(
+            lambda s: P(None, *s), holder["axes"],
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        ps.append(stacked)
+        as_.append(axes)
+    return ps, as_
+
+
+def _segment_scan(seg: Segment, params_stacked, x, cfg, apply_fn, remat: bool):
+    """Training/prefill scan over one segment (no caches)."""
+
+    def body(carry, layer_params):
+        xx, aux = carry
+        for bi, kind in enumerate(seg.pattern):
+            xx, _, al = apply_block(
+                kind, layer_params[f"b{bi}"], xx, cfg, apply_fn
+            )
+            aux = aux + al
+        # Sequence parallelism: layer-boundary activations (the tensors
+        # the scan stores for backward) live sequence-sharded on 'model';
+        # GSPMD all-gathers at the next block's projections (Megatron-SP).
+        if getattr(cfg, "pure_fsdp", False):
+            xx = shard_hint(xx, P(("data", "model"), None, None))
+        else:
+            xx = shard_hint(xx, P(("pod", "data"), "model", None))
+        return (xx, aux), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params_stacked)
+    return x, aux
+
+
+def _segment_scan_cached(
+    seg: Segment, params_stacked, caches, x, cfg, apply_fn, pos, enc_out,
+    decode: bool,
+):
+    """Decode/prefill scan over layers, caches updated IN PLACE.
+
+    The full stacked cache rides in the scan *carry* and each iteration
+    dynamic-updates its layer slice — XLA aliases the carry across
+    iterations, so the (multi-TB-scale) KV cache is single-buffered.
+    Passing caches as scan xs/ys instead costs ~2-3x the cache in temps.
+    """
+
+    def body(carry, xs):
+        xx, aux, cfull = carry
+        i, layer_params = xs
+        layer_cache = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, i, 0, keepdims=False),
+            cfull,
+        )
+        new_caches = {}
+        for bi, kind in enumerate(seg.pattern):
+            xx, nc, al = apply_block(
+                kind, layer_params[f"b{bi}"], xx, cfg, apply_fn,
+                cache=layer_cache[f"b{bi}"], pos=pos, enc_out=enc_out,
+                decode=decode,
+            )
+            new_caches[f"b{bi}"] = nc
+            aux = aux + al
+        cfull = jax.tree.map(
+            lambda c, nc: jax.lax.dynamic_update_index_in_dim(
+                c, nc.astype(c.dtype), i, 0
+            ),
+            cfull, new_caches,
+        )
+        return (xx, aux, cfull), None
+
+    (x, aux, new_caches), _ = jax.lax.scan(
+        body, (x, jnp.float32(0.0), caches),
+        (jnp.arange(seg.n), params_stacked),
+    )
+    return x, new_caches, aux
+
+
+def init_caches(cfg, B: int, S_max: int, enc_len: int = 0):
+    """Stacked decode caches per segment."""
+    segs = segments_for(cfg)
+    caches, axes = [], []
+    for seg in segs:
+        one = {
+            f"b{bi}": zero_cache(kind, cfg, B, S_max, enc_len)
+            for bi, kind in enumerate(seg.pattern)
+        }
+        ax1 = {
+            f"b{bi}": cache_axes(kind, cfg)
+            for bi, kind in enumerate(seg.pattern)
+        }
+        caches.append(
+            jax.tree.map(lambda z: jnp.broadcast_to(z, (seg.n, *z.shape)), one)
+        )
+        axes.append(
+            jax.tree.map(
+                lambda s: P(None, *s), ax1, is_leaf=lambda x: isinstance(x, P)
+            )
+        )
+    return caches, axes
+
+
+def encode(params, frames, cfg, purpose: str = "train"):
+    """Encoder side of enc-dec models; frames [B, Se, d_front]."""
+    apply_fn = _apply_fn_for(purpose)
+    x = nn.linear_apply(params["front"], frames, cfg)
+    seg = Segment(("enc_attn",), cfg.n_enc_layers)
+    x, _ = _segment_scan(
+        seg, params["encoder"][0], x, cfg, apply_fn, cfg.remat == "layer"
+    )
+    return nn.rmsnorm_apply(params["enc_norm"], x)
+
+
+def forward(params, batch, cfg, purpose: str = "train"):
+    """Training forward + next-token CE loss.
+
+    batch: {'tokens' [B,S] int32, optional 'front' [B,F,d_front],
+            optional 'frames' [B,Se,d_front] (enc-dec)}
+    """
+    apply_fn = _apply_fn_for(purpose)
+    tokens = batch["tokens"]
+    x = nn.embed_apply(params["embed"], tokens)
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = encode(params, batch["frames"], cfg, purpose)
+    if cfg.frontend != "none" and "front" in batch and cfg.n_enc_layers == 0:
+        fx = nn.linear_apply(params["front"], batch["front"], cfg)
+        x = jnp.concatenate([fx.astype(x.dtype), x], axis=1)
+
+    x = shard_hint(x, P(("pod", "data"), None, None))
+    aux_total = jnp.float32(0.0)
+    segs = segments_for(cfg)
+    for seg, sp in zip(segs, params["segments"]):
+        if cfg.n_enc_layers:
+            x, aux = _segment_scan_encdec(
+                seg, sp, x, cfg, apply_fn, enc_out, cfg.remat == "layer"
+            )
+        else:
+            x, aux = _segment_scan(seg, sp, x, cfg, apply_fn, cfg.remat == "layer")
+        aux_total = aux_total + aux
+
+    x = nn.rmsnorm_apply(params["final_norm"], x)
+    head = params.get("head", params["embed"])
+    if cfg.frontend != "none" and "front" in batch and cfg.n_enc_layers == 0:
+        x = x[:, -tokens.shape[1]:]
+    logits = nn.logits_apply(head, x, vocab=cfg.vocab)
+    logits = shard_hint(logits, P(("pod", "data"), None, "model"))
+    loss = next_token_loss(logits, tokens)
+    return loss + 0.01 * aux_total, logits[..., : cfg.vocab]
+
+
+def _segment_scan_encdec(seg, params_stacked, x, cfg, apply_fn, enc_out, remat):
+    def body(carry, layer_params):
+        xx, aux = carry
+        for bi, kind in enumerate(seg.pattern):
+            xx, _, al = apply_block(
+                kind, layer_params[f"b{bi}"], xx, cfg, apply_fn, enc_out=enc_out
+            )
+            aux = aux + al
+        return (xx, aux), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params_stacked)
+    return x, aux
+
+
+def next_token_loss(logits, tokens):
+    """Mean CE of next-token prediction (f32 logsumexp).
+
+    The true-class logit is extracted with an iota-compare reduce, NOT a
+    gather — a gather over the vocab axis forces GSPMD to all-gather the
+    vocab-sharded logits (tens of GB/device at production shapes)."""
+    lg = logits[:, :-1].astype(jnp.float32)
+    tg = tokens[:, 1:]
+    m = jax.lax.stop_gradient(jnp.max(lg, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+    true = jnp.sum(jnp.where(vocab_iota == tg[..., None], lg, 0.0), axis=-1)
+    return jnp.mean(lse - true)
+
+
+def prefill(params, batch, cfg, S_max: Optional[int] = None):
+    """Serve-path prefill: forward over the prompt, build decode caches.
+
+    Returns (logits_last [B, vocab], caches).
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    S_max = S_max or S
+    enc_out = None
+    enc_len = 0
+    if cfg.n_enc_layers:
+        enc_out = encode(params, batch["frames"], cfg, purpose="serve")
+        enc_len = enc_out.shape[1]
+    caches, _ = init_caches(cfg, B, S_max, enc_len)
+    apply_fn = _apply_fn_for("serve")
+
+    x = nn.embed_apply(params["embed"], tokens)
+    if cfg.frontend != "none" and "front" in batch and cfg.n_enc_layers == 0:
+        fx = nn.linear_apply(params["front"], batch["front"], cfg)
+        x = jnp.concatenate([fx.astype(x.dtype), x], axis=1)
+    segs = segments_for(cfg)
+    new_caches = []
+    for seg, sp, ch in zip(segs, params["segments"], caches):
+        x, nc, _ = _segment_scan_cached(
+            seg, sp, ch, x, cfg, apply_fn, pos=None, enc_out=enc_out, decode=False
+        )
+        new_caches.append(nc)
+    x = nn.rmsnorm_apply(params["final_norm"], x)
+    head = params.get("head", params["embed"])
+    logits = nn.logits_apply(head, x[:, -1:], vocab=cfg.vocab)
+    return logits[:, 0, : cfg.vocab], new_caches
+
+
+def decode_step(params, caches, tokens, pos, cfg):
+    """One decode step: tokens [B, 1] -> (logits [B, vocab], new caches)."""
+    apply_fn = _apply_fn_for("serve")
+    x = nn.embed_apply(params["embed"], tokens)
+    x = shard_hint(x, P(("pod", "data"), None, None))
+    segs = segments_for(cfg)
+    new_caches = []
+    for seg, sp, ch in zip(segs, params["segments"], caches):
+        x, nc, _ = _segment_scan_cached(
+            seg, sp, ch, x, cfg, apply_fn, pos=pos, enc_out=None, decode=True
+        )
+        new_caches.append(nc)
+    x = nn.rmsnorm_apply(params["final_norm"], x)
+    head = params.get("head", params["embed"])
+    logits = nn.logits_apply(head, x, vocab=cfg.vocab)
+    return logits[:, 0, : cfg.vocab], new_caches

@@ -1,0 +1,115 @@
+"""Mixture-of-Experts FFN: top-k routing, shared experts, EP sharding.
+
+Mesh-TF-style *grouped* capacity dispatch: tokens are routed per group
+(one sequence = one group, so groups shard over ('pod','data') and
+experts over 'model'); dispatch/combine are one-hot einsums that GSPMD
+lowers to all-to-alls on the 'model' axis.  Per-device transient is
+t * E/ep * cap * ~2B — bounded, layer-remat'd.
+
+Used by kimi-k2 (384e top-8 + 1 shared) and deepseek-v3 (256e top-8 +
+1 shared); both with MLA attention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import nn
+
+
+def init_moe(key, cfg, linear_init=nn.init_linear):
+    d, E, F = cfg.d_model, cfg.n_experts, cfg.d_expert
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["router"] = {"w": nn._winit(ks[0], (d, E), scale=0.02)}
+    a["router"] = {"w": P(None, None)}
+    p["wi"], a["wi"] = linear_init(ks[1], d, F, cfg, expert=E)
+    p["wg"], a["wg"] = linear_init(ks[2], d, F, cfg, expert=E)
+    p["wo"], a["wo"] = linear_init(ks[3], F, d, cfg, expert=E)
+    if cfg.n_shared:
+        Fs = F * cfg.n_shared
+        kk = jax.random.split(ks[4], 3)
+        p["shared_wi"], a["shared_wi"] = linear_init(kk[0], d, Fs, cfg)
+        p["shared_wg"], a["shared_wg"] = linear_init(kk[1], d, Fs, cfg)
+        p["shared_wo"], a["shared_wo"] = linear_init(
+            kk[2], Fs, d, cfg, shard=("model", None)
+        )
+    return p, a
+
+
+MAX_GROUP_TOKENS = 4096
+
+
+def moe_apply(params, x, cfg, apply_fn=nn.linear_apply, expert_apply_fn=None):
+    """x: [B, S, D] -> (y [B, S, D], aux_loss).
+
+    Routing groups are sequence slices of <= MAX_GROUP_TOKENS: the
+    dispatch tensor is [G, t, E, cap] with cap ~ t*k/E, i.e. O(t^2) per
+    group — 32k-token groups at prefill would materialise hundreds of
+    TB globally."""
+    if expert_apply_fn is None:
+        expert_apply_fn = (
+            nn.serve_expert_linear_apply
+            if apply_fn is nn.serve_linear_apply
+            else apply_fn
+        )
+    B, S, D = x.shape
+    if S > MAX_GROUP_TOKENS:
+        assert S % MAX_GROUP_TOKENS == 0, (S, MAX_GROUP_TOKENS)
+        xg = x.reshape(B * (S // MAX_GROUP_TOKENS), MAX_GROUP_TOKENS, D)
+        y, aux = _moe_grouped(params, xg, cfg, apply_fn, expert_apply_fn)
+        return y.reshape(B, S, D), aux
+    return _moe_grouped(params, x, cfg, apply_fn, expert_apply_fn)
+
+
+def _moe_grouped(params, x, cfg, apply_fn, expert_apply_fn):
+    G, t, D = x.shape          # group = (slice of a) sequence
+    E, k = cfg.n_experts, cfg.top_k
+    cap = max(int(cfg.capacity_factor * t * k / E), 1)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", x.astype(jnp.float32), params["router"]["w"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                      # [G, t, k]
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # queue position of each (token, slot) within its expert, per group
+    oh_e = jax.nn.one_hot(eidx, E, dtype=jnp.int32)            # [G, t, k, E]
+    flat = oh_e.reshape(G, t * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos = jnp.sum(pos * flat, axis=-1).reshape(G, t, k)        # [G, t, k]
+    keep = pos < cap
+    gates = gates * keep
+
+    oh_c = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=nn.COMPUTE_DTYPE)
+    oh_eb = oh_e.astype(nn.COMPUTE_DTYPE)
+    disp = jnp.einsum("gtke,gtkc->gtec", oh_eb, oh_c)          # [G, t, E, cap]
+    xe = jnp.einsum("gtec,gtd->gecd", disp, x.astype(nn.COMPUTE_DTYPE))
+
+    # per-expert SwiGLU on [G, E, cap, D] (E stays sharded on 'model')
+    h = expert_apply_fn(params["wi"], xe, cfg) * jax.nn.silu(
+        expert_apply_fn(params["wg"], xe, cfg)
+    )
+    ye = expert_apply_fn(params["wo"], h, cfg)                 # [G, E, cap, D]
+
+    comb = jnp.einsum(
+        "gtke,gtkc->gtec", oh_eb * gates.astype(nn.COMPUTE_DTYPE)[..., None], oh_c
+    )
+    y = jnp.einsum("gtec,gecd->gtd", comb, ye)
+
+    if cfg.n_shared:
+        hs = apply_fn(params["shared_wi"], x, cfg) * jax.nn.silu(
+            apply_fn(params["shared_wg"], x, cfg)
+        )
+        y = y + apply_fn(params["shared_wo"], hs, cfg)
+
+    # Switch-style load-balance auxiliary loss
+    me = jnp.mean(probs.reshape(-1, E), axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(eidx[..., 0].reshape(-1), E, dtype=jnp.float32), axis=0
+    )
+    aux = E * jnp.sum(me * ce)
+    return y.astype(x.dtype), aux

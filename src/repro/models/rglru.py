@@ -1,0 +1,105 @@
+"""RecurrentGemma / Griffin recurrent block (arXiv:2402.19427).
+
+    x -> [linear -> causal conv1d(4) -> RG-LRU] * silu(linear gate) -> out
+
+RG-LRU:
+    r_t = sigmoid(W_r x_t),  i_t = sigmoid(W_i x_t)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (log-space
+linear recurrence — O(S log S) depth, fully parallel); decode is the
+single-step cell.  This is the sub-quadratic path for long_500k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import nn
+from repro.models.xlstm import _depthwise_causal_conv
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg, linear_init=nn.init_linear):
+    d = cfg.d_model
+    lru = cfg.lru_dim or d
+    ks = jax.random.split(key, 7)
+    p, a = {}, {}
+    p["win"], a["win"] = linear_init(ks[0], d, lru, cfg)
+    p["wgate"], a["wgate"] = linear_init(ks[1], d, lru, cfg)
+    p["conv"] = {"w": jax.random.normal(ks[2], (cfg.conv_width, lru)) * 0.1}
+    a["conv"] = {"w": P(None, "model")}
+    p["wr"] = {"w": nn._winit(ks[3], (lru, lru), scale=0.02)}
+    a["wr"] = {"w": P("model", None)}
+    p["wi"] = {"w": nn._winit(ks[4], (lru, lru), scale=0.02)}
+    a["wi"] = {"w": P("model", None)}
+    # Lambda init so a^(1/r) in [0.9, 0.999] as in Griffin
+    lam = jax.random.uniform(ks[5], (lru,), minval=0.9, maxval=0.999)
+    p["lam"] = {"l": jnp.log(jnp.exp(-jnp.log(lam) / _C) - 1.0)}
+    a["lam"] = {"l": P("model")}
+    p["wout"], a["wout"] = linear_init(ks[6], lru, d, cfg, shard=("model", None))
+    return p, a
+
+
+def rglru_zero_state(B, lru, conv_width=4, dtype=jnp.float32):
+    # 'conv' carries the last (W-1) pre-conv inputs for decode (zeros ==
+    # the train-time causal left padding)
+    return {
+        "h": jnp.zeros((B, lru), dtype),
+        "conv": jnp.zeros((B, conv_width - 1, lru), dtype),
+    }
+
+
+def _gates(params, u):
+    """u [B, S, lru] (post-conv). Returns (log_a, bx) in f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["wr"]["w"])
+    i = jax.nn.sigmoid(uf @ params["wi"]["w"])
+    log_a = -_C * jax.nn.softplus(params["lam"]["l"]) * r
+    a2 = jnp.exp(2.0 * log_a)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * (i * uf)
+    return log_a, bx
+
+
+def rglru_block_apply(params, x, cfg, state=None, apply_fn=nn.linear_apply):
+    """x [B, S, d] -> (y, state). S==1 single-step decode supported."""
+    B, S, d = x.shape
+    u_in = apply_fn(params["win"], x, cfg).astype(jnp.float32)
+    if state is None:
+        state = rglru_zero_state(B, u_in.shape[-1], cfg.conv_width)
+    h0 = state["h"]
+
+    if S == 1:
+        # decode: conv over [carried tail, current token]
+        window = jnp.concatenate(
+            [state["conv"].astype(jnp.float32), u_in], axis=1
+        )
+        u = jnp.einsum("bwl,wl->bl", window, params["conv"]["w"])[:, None, :]
+    else:
+        u = _depthwise_causal_conv(u_in, params["conv"]["w"])
+    new_conv = jnp.concatenate(
+        [state["conv"].astype(jnp.float32), u_in], axis=1
+    )[:, -(cfg.conv_width - 1):]
+    log_a, bx = _gates(params, u)
+
+    if S == 1:
+        h = jnp.exp(log_a[:, 0]) * h0 + bx[:, 0]
+        hs = h[:, None, :]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        # associative linear recurrence: (a, b) o (a', b') = (aa', a'b + b')
+        def comb(l, r):
+            return (l[0] + r[0], jnp.exp(r[0]) * l[1] + r[1])
+
+        # inject initial state into the first step
+        bx = bx.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+        la, hs = jax.lax.associative_scan(comb, (log_a, bx), axis=1)
+        new_state = {"h": hs[:, -1], "conv": new_conv}
+
+    g = jax.nn.silu(apply_fn(params["wgate"], x, cfg))
+    y = apply_fn(params["wout"], hs.astype(x.dtype) * g, cfg)
+    return y, new_state

@@ -1,0 +1,241 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) + sLSTM
+(scalar memory with state mixing), assembled 7:1 as in the paper.
+
+mLSTM cell (stabilised exponential gating):
+    m_t = max(f~_t + m_{t-1}, i~_t)
+    f'  = exp(f~ + m_{t-1} - m_t),  i' = exp(i~ - m_t)
+    C_t = f' C_{t-1} + i' v_t k_t^T          [B, H, hd, hd]
+    n_t = f' n_{t-1} + i' k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+Both cells are written as a single-step function reused by (a) the
+training scan over the sequence and (b) single-token decode — this is
+the sub-quadratic path that makes long_500k runnable for this arch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import nn
+
+
+def _depthwise_causal_conv(x, w):
+    """x [B, S, C], w [W, C] -> causal depthwise conv."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out
+
+
+# sqrt-checkpointing optimum: backward stores S/CHUNK outer carries +
+# CHUNK inner recompute carries; S=4096 => CHUNK=64 minimises the sum.
+CHUNK = 64
+
+
+def chunked_scan(cell, state, xs, length):
+    """Two-level time scan with rematerialised inner chunks.
+
+    A flat ``lax.scan`` over S time steps stores the carry at EVERY step
+    for backward — for the mLSTM matrix memory [B, H, hd, hd] that is
+    S x state bytes (petabytes at train_4k production shapes).  Chunking
+    (outer scan over S/CHUNK, inner remat'd scan over CHUNK) stores only
+    chunk-boundary states and recomputes inside — the standard
+    linear-RNN training memory fix.
+
+    xs: tuple of arrays with leading time dim [S, ...].
+    """
+    if length <= CHUNK:
+        return jax.lax.scan(cell, state, xs)
+    assert length % CHUNK == 0, (length, CHUNK)
+    n = length // CHUNK
+    xs_c = jax.tree.map(
+        lambda a: a.reshape(n, CHUNK, *a.shape[1:]), xs
+    )
+
+    @jax.checkpoint
+    def outer(st, chunk):
+        return jax.lax.scan(cell, st, chunk)
+
+    state, ys = jax.lax.scan(outer, state, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(length, *a.shape[2:]), ys)
+    return state, ys
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg, linear_init=nn.init_linear):
+    d = cfg.d_model
+    inner = 2 * d
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    p, a = {}, {}
+    p["up"], a["up"] = linear_init(ks[0], d, 2 * inner, cfg)
+    p["conv"] = {"w": jax.random.normal(ks[1], (cfg.conv_width, inner)) * 0.1}
+    a["conv"] = {"w": P(None, "model")}
+    p["wq"], a["wq"] = linear_init(ks[2], inner, inner, cfg, shard=("model", None))
+    p["wk"], a["wk"] = linear_init(ks[3], inner, inner, cfg, shard=("model", None))
+    p["wv"], a["wv"] = linear_init(ks[4], inner, inner, cfg, shard=("model", None))
+    p["wi"] = {"w": nn._winit(ks[5], (inner, H), scale=0.02)}
+    a["wi"] = {"w": P("model", None)}
+    p["wf"] = {"w": nn._winit(ks[6], (inner, H), scale=0.02),
+               "b": jnp.ones((H,)) * 3.0}
+    a["wf"] = {"w": P("model", None), "b": P(None)}
+    p["down"], a["down"] = linear_init(ks[7], inner, d, cfg, shard=("model", None))
+    return p, a
+
+
+def mlstm_zero_state(B, H, hd, conv_width=4, dtype=jnp.float32):
+    return {
+        "C": jnp.zeros((B, H, hd, hd), dtype),
+        "n": jnp.zeros((B, H, hd), dtype),
+        "m": jnp.full((B, H), -1e30, dtype),
+        # last (W-1) pre-conv inputs (decode conv state)
+        "conv": jnp.zeros((B, conv_width - 1, H * hd), dtype),
+    }
+
+
+def _mlstm_cell(state, qkvif):
+    q, k, v, it, ft = qkvif  # q/k/v [B,H,hd]; it/ft [B,H]
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(ft + m, it)
+    fp = jnp.exp(ft + m - m_new)
+    ip = jnp.exp(it - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )
+    n = fp[..., None] * n + ip[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), jnp.exp(-m_new)
+    )
+    h = num / den[..., None]
+    return {"C": C, "n": n, "m": m_new}, h
+
+
+def mlstm_apply(params, x, cfg, state=None, apply_fn=nn.linear_apply):
+    """x [B, S, d] -> (y, final_state). Works for S==1 decode too."""
+    B, S, d = x.shape
+    inner = 2 * d
+    H = cfg.n_heads
+    hd = inner // H
+    u = apply_fn(params["up"], x, cfg)
+    xi, z = jnp.split(u, 2, axis=-1)
+    if state is None:
+        state = mlstm_zero_state(B, H, hd, cfg.conv_width)
+    xi32 = xi.astype(jnp.float32)
+    if S == 1:
+        window = jnp.concatenate(
+            [state["conv"].astype(jnp.float32), xi32], axis=1
+        )
+        c = jnp.einsum("bwl,wl->bl", window, params["conv"]["w"])[:, None, :]
+    else:
+        c = _depthwise_causal_conv(xi32, params["conv"]["w"])
+    new_conv = jnp.concatenate(
+        [state["conv"].astype(jnp.float32), xi32], axis=1
+    )[:, -(cfg.conv_width - 1):]
+    c = jax.nn.silu(c)
+    c = c.astype(x.dtype)
+    q = apply_fn(params["wq"], c, cfg).reshape(B, S, H, hd)
+    k = apply_fn(params["wk"], c, cfg).reshape(B, S, H, hd) / jnp.sqrt(hd)
+    v = apply_fn(params["wv"], xi, cfg).reshape(B, S, H, hd)
+    it = jnp.einsum("bsk,kh->bsh", c.astype(jnp.float32), params["wi"]["w"])
+    ft = jnp.einsum("bsk,kh->bsh", c.astype(jnp.float32), params["wf"]["w"])
+    ft = jax.nn.log_sigmoid(ft + params["wf"]["b"])
+
+    def step(st, xs):
+        return _mlstm_cell(st, xs)
+
+    xs = (
+        q.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        it.transpose(1, 0, 2),
+        ft.transpose(1, 0, 2),
+    )
+    cell_state = {k_: state[k_] for k_ in ("C", "n", "m")}
+    cell_state, hs = chunked_scan(step, cell_state, xs, S)  # hs [S, B, H, hd]
+    state = dict(cell_state, conv=new_conv)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, inner).astype(x.dtype)
+    y = apply_fn(params["down"], h * jax.nn.silu(z), cfg)
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, linear_init=nn.init_linear):
+    d = cfg.d_model
+    H = cfg.n_heads
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    # input projections for gates (z, i, f, o) + block-diag recurrent mats
+    p["wx"], a["wx"] = linear_init(ks[0], d, 4 * d, cfg)
+    hd = d // H
+    p["r"] = {"w": jax.random.normal(ks[1], (4, H, hd, hd)) * 0.05}
+    # H is small (4): shard the recurrent matrices over hd instead
+    a["r"] = {"w": P(None, None, "model", None)}
+    p["bias"] = {"b": jnp.concatenate([jnp.zeros(3 * d), jnp.ones(d) * 3.0])}
+    a["bias"] = {"b": P(None)}
+    p["down"], a["down"] = linear_init(ks[2], d, d, cfg)
+    p["up_gate"], a["up_gate"] = linear_init(ks[3], d, d, cfg)
+    return p, a
+
+
+def slstm_zero_state(B, d, dtype=jnp.float32):
+    return {
+        "c": jnp.zeros((B, d), dtype),
+        "n": jnp.ones((B, d), dtype),
+        "h": jnp.zeros((B, d), dtype),
+        "m": jnp.zeros((B, d), dtype),
+    }
+
+
+def _slstm_cell(params, state, x4, H):
+    """x4 [B, 4d] pre-activations from input; state mixing via R."""
+    B, d4 = x4.shape
+    d = d4 // 4
+    hd = d // H
+    hprev = state["h"].reshape(B, H, hd)
+    rw = params["r"]["w"]  # [4, H, hd, hd]
+    rec = jnp.einsum("bhi,ghij->gbhj", hprev, rw).reshape(4, B, d)
+    pre = x4.reshape(B, 4, d).transpose(1, 0, 2) + rec + params["bias"][
+        "b"
+    ].reshape(4, d)[:, None, :]
+    z, i, f, o = pre[0], pre[1], pre[2], pre[3]
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    logf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(logf + state["m"], i)
+    ip = jnp.exp(i - m_new)
+    fp = jnp.exp(logf + state["m"] - m_new)
+    c = fp * state["c"] + ip * z
+    n = fp * state["n"] + ip
+    h = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+
+def slstm_apply(params, x, cfg, state=None, apply_fn=nn.linear_apply):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    x4 = apply_fn(params["wx"], x, cfg).astype(jnp.float32)
+    if state is None:
+        state = slstm_zero_state(B, d)
+
+    def step(st, xt):
+        return _slstm_cell(params, st, xt, H)
+
+    state, hs = chunked_scan(step, state, x4.transpose(1, 0, 2), S)
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    g = jax.nn.silu(apply_fn(params["up_gate"], x, cfg))
+    y = apply_fn(params["down"], h * g, cfg)
+    return y, state

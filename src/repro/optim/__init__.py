@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm  # noqa: F401
+from repro.optim.schedules import wsd_schedule, cosine_schedule, linear_warmup  # noqa: F401
+from repro.optim.lowbit import q8_encode, q8_decode  # noqa: F401

@@ -1,0 +1,42 @@
+"""Block-wise 8-bit optimizer-state quantisation (8-bit-Adam-style).
+
+At 1T params, f32 Adam moments (8 bytes/param) exceed 2 v5e pods; int8
+moments + per-block f32 scales (=> ~2.03 bytes/param) fit.  This is the
+same insight as the paper's: low-bit integer codes + small shared
+codebooks/scales preserve fidelity at a fraction of the memory.
+
+SHARDING-CRITICAL layout: blocks are formed by splitting the LAST axis
+(x [..., N] -> q [..., N/256, 256]), never by flattening.  A flatten
+destroys GSPMD sharding propagation and replicates terabyte-scale
+moment tensors (observed: 4 TB/device temps on the kimi-1T dry-run);
+the last-axis split keeps every leading (sharded) dim intact.
+
+Tensors whose last dim is not divisible by 256 (norm scales, biases,
+small heads) stay f32 — they are a negligible fraction of the state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def q8_compatible(x) -> bool:
+    return x.ndim >= 1 and x.shape[-1] % BLOCK == 0 and x.shape[-1] > 0
+
+
+def q8_encode(x: jnp.ndarray):
+    """[..., N] -> {'q': int8 [..., N/256, 256], 'scale': f32 [..., N/256]}."""
+    assert q8_compatible(x), x.shape
+    blk = x.reshape(*x.shape[:-1], x.shape[-1] // BLOCK, BLOCK)
+    scale = jnp.max(jnp.abs(blk), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blk / scale[..., None]), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale}
+
+
+def q8_decode(enc, shape) -> jnp.ndarray:
+    blk = enc["q"].astype(jnp.float32) * enc["scale"][..., None]
+    return blk.reshape(shape)

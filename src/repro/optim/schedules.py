@@ -1,0 +1,29 @@
+"""LR schedules. WSD (warmup-stable-decay) is MiniCPM's schedule
+(arXiv:2404.06395 §4): linear warmup, long stable plateau, short
+exponential-ish decay tail."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, base_lr, warmup_steps):
+    return base_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, base_lr, total_steps, warmup_steps=0, min_ratio=0.1):
+    warm = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+    t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * warm * cos
+
+
+def wsd_schedule(step, base_lr, total_steps, warmup_steps=0, decay_frac=0.1,
+                 min_ratio=0.01):
+    """Warmup-Stable-Decay: plateau at base_lr, decay in the last
+    ``decay_frac`` of training (exponential to min_ratio)."""
+    warm = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+    decay_start = total_steps * (1.0 - decay_frac)
+    t = jnp.clip((step - decay_start) / max(total_steps - decay_start, 1), 0, 1)
+    decay = jnp.power(min_ratio, t)  # 1 -> min_ratio exponentially
+    return base_lr * warm * decay

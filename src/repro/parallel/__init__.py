@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (  # noqa: F401
+    shard_hint,
+    make_shardings,
+    batch_spec,
+)

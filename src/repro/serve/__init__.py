@@ -1,0 +1,1 @@
+from repro.serve.loop import ServeLoop, Request  # noqa: F401

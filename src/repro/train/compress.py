@@ -1,0 +1,60 @@
+"""Gradient compression for cross-pod sync (DESIGN.md §5).
+
+int8 stochastic-rounding quantise-dequantise with error feedback.
+On real multi-pod deployments the encode runs before the 'pod'-axis
+all-reduce (8x fewer DCI bytes); under a single jit the compression is
+applied to the gradient values themselves, which reproduces the
+*numerics* (what convergence tests must survive) while GSPMD still owns
+the collective schedule.
+
+Stochastic rounding keeps the quantiser unbiased:
+    E[q8_sr(x)] = x   (property-tested in tests/test_substrates.py)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 1024
+
+
+def _blocked(x):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % BLOCK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, BLOCK), pad
+
+
+def q8_sr(x: jnp.ndarray, key) -> jnp.ndarray:
+    """int8 stochastic-round quantise-dequantise (per 1024-block scale)."""
+    blk, _ = _blocked(x.astype(jnp.float32))
+    scale = jnp.maximum(jnp.max(jnp.abs(blk), axis=1, keepdims=True) / 127.0, 1e-12)
+    y = blk / scale
+    lo = jnp.floor(y)
+    frac = y - lo
+    u = jax.random.uniform(key, y.shape)
+    q = jnp.clip(lo + (u < frac), -127, 127)
+    out = (q * scale).reshape(-1)[: x.size].reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def compress_grads(grads, key, error_state=None):
+    """QDQ every gradient leaf; error feedback accumulates the residual.
+
+    Returns (compressed_grads, new_error_state).
+    """
+    leaves, tdef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    if error_state is None:
+        err = [jnp.zeros_like(l, jnp.float32) for l in leaves]
+    else:
+        err = jax.tree.leaves(error_state)
+    outs, new_err = [], []
+    for l, e, k in zip(leaves, err, keys):
+        corrected = l.astype(jnp.float32) + e
+        q = q8_sr(corrected, k)
+        outs.append(q.astype(l.dtype))
+        new_err.append(corrected - q.astype(jnp.float32))
+    return tdef.unflatten(outs), tdef.unflatten(new_err)

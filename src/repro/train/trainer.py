@@ -1,0 +1,131 @@
+"""Training step + loop.
+
+``make_train_step`` builds a jit-able step with: optional gradient
+accumulation (lax.scan over microbatches), global-norm clipping,
+optional int8 gradient compression (cross-pod sync numerics), AdamW
+with configurable state dtype, and any schedule from optim.schedules.
+
+The step is pure — GSPMD owns every collective (grad psum over
+('pod','data'), TP collectives inside the model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedules import cosine_schedule, wsd_schedule
+from repro.train.compress import compress_grads
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 3e-4
+    total_steps: int = 1000
+    warmup_steps: int = 20
+    schedule: str = "cosine"      # cosine | wsd
+    clip_norm: float = 1.0
+    accum_steps: int = 1
+    compress: bool = False        # int8 grad compression
+    adamw: AdamWConfig = AdamWConfig()
+
+
+def schedule_fn(tc: TrainConfig):
+    if tc.schedule == "wsd":
+        return lambda s: wsd_schedule(s, tc.lr, tc.total_steps, tc.warmup_steps)
+    return lambda s: cosine_schedule(s, tc.lr, tc.total_steps, tc.warmup_steps)
+
+
+def make_train_step(cfg, tc: TrainConfig, forward_fn: Optional[Callable] = None):
+    """Returns train_step(params, opt_state, batch, step, key) ->
+    (params, opt_state, metrics)."""
+    fwd = forward_fn or (lambda p, b: lm.forward(p, b, cfg)[0])
+    sched = schedule_fn(tc)
+
+    def loss_and_grads(params, batch):
+        return jax.value_and_grad(fwd)(params, batch)
+
+    def train_step(params, opt_state, batch, step, key):
+        if tc.accum_steps > 1:
+            def micro(carry, mb):
+                acc, lsum = carry
+                l, g = loss_and_grads(params, mb)
+                return (jax.tree.map(jnp.add, acc, g), lsum + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape(tc.accum_steps, -1, *x.shape[1:]), batch
+            )
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(micro, (zero, jnp.float32(0)), mbs)
+            loss = lsum / tc.accum_steps
+            grads = jax.tree.map(lambda g: g / tc.accum_steps, gsum)
+        else:
+            loss, grads = loss_and_grads(params, batch)
+
+        if tc.compress:
+            grads, _ = compress_grads(grads, key)
+
+        grads, gnorm = clip_by_global_norm(grads, tc.clip_norm)
+        lr = sched(step)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, lr, tc.adamw
+        )
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class TrainLoop:
+    """Host-side loop: data, jit'd step, checkpointing, metrics."""
+
+    def __init__(self, cfg, tc: TrainConfig, data, ckpt_dir=None,
+                 ckpt_interval=50, donate=True, forward_fn=None):
+        self.cfg, self.tc, self.data = cfg, tc, data
+        self.ckpt_dir, self.ckpt_interval = ckpt_dir, ckpt_interval
+        step_fn = make_train_step(cfg, tc, forward_fn=forward_fn)
+        self.step_fn = jax.jit(
+            step_fn, donate_argnums=(0, 1) if donate else ()
+        )
+        self.metrics_log = []
+
+    def init(self, seed=0):
+        params, _ = lm.init_lm(jax.random.PRNGKey(seed), self.cfg)
+        opt_state = adamw_init(params, self.tc.adamw)
+        return params, opt_state
+
+    def run(self, params, opt_state, start_step=0, num_steps=100,
+            step_hook=None):
+        from repro.checkpoint import save_checkpoint
+
+        key = jax.random.PRNGKey(1234)
+        for step in range(start_step, start_step + num_steps):
+            batch = {
+                k: jnp.asarray(v) for k, v in self.data.batch(step).items()
+            }
+            t0 = time.perf_counter()
+            params, opt_state, m = self.step_fn(
+                params, opt_state, batch, jnp.int32(step),
+                jax.random.fold_in(key, step),
+            )
+            m = {k: float(v) for k, v in m.items()}
+            m["step"] = step
+            m["wall_s"] = time.perf_counter() - t0
+            self.metrics_log.append(m)
+            if step_hook:
+                step_hook(step, params, opt_state, m)
+            if self.ckpt_dir and (step + 1) % self.ckpt_interval == 0:
+                save_checkpoint(
+                    self.ckpt_dir, step + 1,
+                    {"params": params, "opt": opt_state},
+                    metadata={"loss": m["loss"]},
+                )
+        return params, opt_state

@@ -1,0 +1,76 @@
+"""The paper's own model: quantised ResNet-18 + TLMAC conv path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.resnet18 import SMOKE as CFG
+from repro.models.resnet import (
+    compile_resnet,
+    forward,
+    init_resnet,
+    quantize_conv_weights,
+    tlmac_conv_forward,
+)
+from repro.models.resnet import tlmac_conv_check
+
+
+@pytest.fixture(scope="module")
+def trained():
+    key = jax.random.PRNGKey(0)
+    params = init_resnet(key, CFG)
+    return params
+
+
+def test_resnet_forward_shapes(trained):
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, CFG.in_hw, CFG.in_hw, 3))
+    logits = forward(trained, x, CFG)
+    assert logits.shape == (2, CFG.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_resnet_qat_grads(trained):
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, CFG.in_hw, CFG.in_hw, 3))
+
+    def loss(p):
+        return jnp.sum(forward(p, x, CFG) ** 2)
+
+    g = jax.grad(loss)(trained)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(g))
+    # quantiser params receive gradient
+    assert float(jnp.abs(g["blocks"][0]["conv1"]["w_step"]).max()) >= 0
+
+
+def test_tlmac_conv_bit_exact(trained):
+    plans = compile_resnet(trained, CFG, anneal_iters=200)
+    name, plan = plans[0]
+    blk = trained["blocks"][0]
+    w_codes = quantize_conv_weights(blk["conv1"], CFG)
+    assert tlmac_conv_check(plan, None, w_codes)
+    a = np.random.default_rng(0).integers(
+        0, 2**CFG.a_bits, size=(2, 6, 6, w_codes.shape[1])
+    )
+    out = tlmac_conv_forward(plan, jnp.asarray(a), CFG.quant)
+    ref = jax.lax.conv_general_dilated(
+        jnp.asarray(a, jnp.float32), jnp.asarray(w_codes, jnp.float32),
+        (1, 1), "SAME", dimension_numbers=("NHWC", "OIHW", "NHWC"),
+    ).astype(jnp.int32)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_tlmac_conv_strided(trained):
+    plans = compile_resnet(trained, CFG, anneal_iters=100)
+    # block 1 conv1 has stride 2 in the smoke config
+    name, plan = plans[2]
+    blk = trained["blocks"][1]
+    w_codes = quantize_conv_weights(blk["conv1"], CFG)
+    a = np.random.default_rng(1).integers(
+        0, 2**CFG.a_bits, size=(1, 8, 8, w_codes.shape[1])
+    )
+    out = tlmac_conv_forward(plan, jnp.asarray(a), CFG.quant, stride=2)
+    ref = jax.lax.conv_general_dilated(
+        jnp.asarray(a, jnp.float32), jnp.asarray(w_codes, jnp.float32),
+        (2, 2), "SAME", dimension_numbers=("NHWC", "OIHW", "NHWC"),
+    ).astype(jnp.int32)
+    assert np.array_equal(np.asarray(out), np.asarray(ref))

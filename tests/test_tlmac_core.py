@@ -1,0 +1,227 @@
+"""TLMAC compiler invariants: groups, clustering, placement, annealing,
+LUT packing — unit + hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tlmac import (
+    anneal_routing,
+    build_clusters,
+    compile_layer,
+    count_routes,
+    extract_groups_conv,
+    extract_groups_matmul,
+    mac_table,
+    random_placement,
+    routing_matrix,
+    unique_groups,
+)
+from repro.core.tlmac.compile import verify_plan
+from repro.core.tlmac.clustering import spectral_cluster_steps
+from repro.core.tlmac.groups import assignment_matrix
+from repro.core.tlmac.lut import eval_lut_array, n_clus_slots, n_lut_bits
+from repro.core.tlmac.placement import apply_swap, swap_delta
+
+
+def _codes(rng, shape, bits):
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1)
+    return rng.integers(lo, hi, size=shape)
+
+
+# ---------------------------------------------------------------------------
+# groups
+# ---------------------------------------------------------------------------
+
+
+def test_conv_group_extraction_roundtrip():
+    rng = np.random.default_rng(0)
+    w = _codes(rng, (128, 8, 3, 3), 3)
+    wg = extract_groups_conv(w)
+    assert wg.D_s == 2 * 8 and wg.D_p == 64 * 3 and wg.G == 3
+    # every group must be a kernel row of the original tensor
+    U, idx = unique_groups(wg)
+    rec = U[idx]  # [D_s, D_p, G]
+    # step s=(ot,i), p=(oc,row): w[ot*64+oc, i, row, :]
+    for s in [0, 5, 15]:
+        ot, i = divmod(s, 8)
+        for p in [0, 7, 191]:
+            oc, row = divmod(p, 3)
+            assert np.array_equal(rec[s, p], w[ot * 64 + oc, i, row])
+
+
+def test_matmul_group_extraction_roundtrip():
+    rng = np.random.default_rng(1)
+    K, N, G, dp = 32, 128, 4, 64
+    w = _codes(rng, (K, N), 2)
+    wg = extract_groups_matmul(w, G=G, d_p=dp)
+    assert wg.D_s == (N // dp) * (K // G) and wg.D_p == dp
+    for s in [0, 3, 15]:
+        nt, kg = divmod(s, K // G)
+        for p in [0, 63]:
+            assert np.array_equal(
+                wg.groups[s, p], w[kg * G:(kg + 1) * G, nt * dp + p]
+            )
+
+
+@given(
+    bits=st.integers(1, 4),
+    G=st.integers(1, 6),
+    n=st.integers(1, 40),
+)
+@settings(max_examples=30, deadline=None)
+def test_mac_table_property(bits, G, n):
+    """T[u, c] == sum of weights selected by the bits of c."""
+    rng = np.random.default_rng(n)
+    U = _codes(rng, (n, G), bits)
+    T = mac_table(U, G)
+    assert T.shape == (n, 2**G)
+    c = int(rng.integers(2**G))
+    u = int(rng.integers(n))
+    ref = sum(int(U[u, g]) for g in range(G) if (c >> g) & 1)
+    assert T[u, c] == ref
+    assert np.all(T[:, 0] == 0)
+    # full-ones code = row sum
+    assert np.array_equal(T[:, 2**G - 1], U.sum(axis=1))
+
+
+# ---------------------------------------------------------------------------
+# clustering
+# ---------------------------------------------------------------------------
+
+
+def test_clustering_respects_cluster_count():
+    rng = np.random.default_rng(2)
+    C = rng.random((64, 30)) < 0.2
+    labels = spectral_cluster_steps(C, 8, seed=0)
+    assert labels.shape == (64,)
+    assert labels.min() >= 0 and labels.max() < 8
+
+
+def test_clustering_trivial_cases():
+    C = np.ones((4, 5), bool)
+    labels = spectral_cluster_steps(C, 8)
+    assert len(labels) == 4  # D_s <= N_clus: one step per cluster
+    labels2 = spectral_cluster_steps(np.ones((16, 3), bool), 1)
+    assert set(labels2) == {0}
+
+
+def test_clustering_groups_similar_steps():
+    """Steps sharing weight groups should co-cluster (the paper's goal)."""
+    rng = np.random.default_rng(3)
+    base = [rng.random(40) < 0.4 for _ in range(4)]
+    C = np.stack([base[i % 4] ^ (rng.random(40) < 0.02) for i in range(32)])
+    labels = spectral_cluster_steps(C, 4, seed=0)
+    # most pairs from the same base pattern should share a label
+    same = sum(labels[i] == labels[j]
+               for i in range(32) for j in range(i + 4, 32, 4))
+    assert same / (32 * 7 // 4 / 1.0) > 0.6
+
+
+def test_greedy_fallback_large():
+    rng = np.random.default_rng(4)
+    C = rng.random((300, 20)) < 0.3
+    labels = spectral_cluster_steps(C, 8, max_spectral=100)
+    assert labels.shape == (300,) and labels.max() < 8
+
+
+# ---------------------------------------------------------------------------
+# placement + annealing
+# ---------------------------------------------------------------------------
+
+
+def _toy_placement(seed=0, D_s=24, D_p=32, n_uwg=40, n_clus=8):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, n_uwg, size=(D_s, D_p))
+    labels = rng.integers(0, n_clus, size=D_s).astype(np.int32)
+    clusters, usage = build_clusters(idx, labels, n_clus)
+    return random_placement(clusters, usage, D_p, seed=seed), idx, labels
+
+
+def test_placement_route_count_matches_dense():
+    pl, _, _ = _toy_placement()
+    R = routing_matrix(pl)
+    assert count_routes(R) == pl.routes()
+
+
+def test_swap_delta_incremental_vs_dense():
+    pl, _, _ = _toy_placement(seed=5)
+    rng = np.random.default_rng(9)
+    for _ in range(50):
+        c = int(rng.integers(pl.N_clus))
+        e0, e1 = rng.choice(pl.N_arr, 2, replace=False)
+        rows = swap_delta(pl, c, int(e0), int(e1))
+        apply_swap(pl, c, int(e0), int(e1), rows)
+        assert count_routes(routing_matrix(pl)) == pl.routes()
+
+
+def test_annealing_never_worsens_and_reduces():
+    pl, _, _ = _toy_placement(seed=7)
+    r0 = pl.routes()
+    res = anneal_routing(pl, iterations=4000, seed=0)
+    assert res.r_init == r0
+    assert res.r_final <= r0          # paper Fig. 6: monotone-ish descent
+    assert res.r_final == pl.routes()  # incremental count is consistent
+    assert res.history[0] == r0
+
+
+@given(seed=st.integers(0, 20))
+@settings(max_examples=10, deadline=None)
+def test_annealing_consistency_property(seed):
+    pl, _, _ = _toy_placement(seed=seed, D_s=12, D_p=16, n_uwg=20)
+    res = anneal_routing(pl, iterations=500, seed=seed)
+    assert res.r_final == count_routes(routing_matrix(pl))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end compile + LUT packing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits,G", [(2, 4), (3, 3), (4, 2)])
+def test_compile_layer_lossless(bits, G):
+    rng = np.random.default_rng(bits * 10 + G)
+    if G == 3:
+        w = _codes(rng, (64, 8, 3, 3), bits)
+    else:
+        w = _codes(rng, (8 * G, 64), bits)
+    plan = compile_layer(w, B_w=bits, B_a=bits, G=G, d_p=64,
+                         anneal_iters=300, seed=0)
+    assert verify_plan(plan)
+    assert plan.N_arr == max(len(c) for c in plan.anneal.placement.clusters)
+    # Algorithm 1 returns R_current, which at tiny iteration budgets can
+    # sit above R_init (high-T acceptance of worse moves); the best-seen
+    # route count can never exceed the initial one.
+    assert plan.anneal.r_best <= plan.routes_before
+
+
+def test_lut_roundtrip_exhaustive():
+    rng = np.random.default_rng(11)
+    w = _codes(rng, (64, 4, 3, 3), 3)
+    plan = compile_layer(w, B_w=3, B_a=3, anneal_iters=200, seed=1)
+    pl = plan.anneal.placement
+    B_l = n_lut_bits(plan.B_w, plan.G)
+    assert plan.lut_inits.shape == (plan.N_arr, B_l)
+    for e in range(0, plan.N_arr, max(plan.N_arr // 8, 1)):
+        for c in range(plan.N_clus):
+            for code in range(2**plan.G):
+                got = eval_lut_array(plan.lut_inits, e, c, code,
+                                     plan.G, plan.B_w)
+                assert got == plan.table[c, e, code]
+
+
+def test_equations_2_4_5():
+    """Paper equations: bit-parallel count, hybrid LUT count, cluster slots."""
+    from repro.core.tlmac.costmodel import bit_parallel_lut_count
+
+    assert bit_parallel_lut_count(G=2, B_a=4, B_p=10) == 2**2 * 10  # §3.1.1 example -> 40
+    assert n_lut_bits(4, 2) == 5     # §3.1.2 example: 4-bit, G=2 -> 5 LUTs
+    assert n_clus_slots(2) == 16     # 2^(6-2)
+    assert n_clus_slots(3) == 8
+    assert n_clus_slots(6) == 1
+
+
+def test_paper_ratio_example():
+    """§3.1.2: 4-bit weights, G=2 -> LUT-to-weight ratio 5/32 ~ 0.16."""
+    ratio = n_lut_bits(4, 2) / (2 * n_clus_slots(2))
+    assert abs(ratio - 0.15625) < 1e-9
