@@ -9,11 +9,17 @@ import numpy as np
 
 
 def timer(fn, *args, reps=3, **kw):
-    fn(*args, **kw)
-    t0 = time.perf_counter()
+    """(result, median us/call) after one warmup/compile call.  Median,
+    not mean: shared-CPU runners spike individual reps by 2-3x and a
+    mean-of-few makes impl-vs-impl ratios unstable."""
+    out = fn(*args, **kw)
+    ts = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         out = fn(*args, **kw)
-    return out, (time.perf_counter() - t0) / reps * 1e6  # us
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return out, ts[len(ts) // 2] * 1e6  # us
 
 
 def resnet18_weight_codes(bits: int, seed: int = 0, width: int = 64,
@@ -57,6 +63,19 @@ def resnet18_weight_codes(bits: int, seed: int = 0, width: int = 64,
                 )
             cin = ch
     return layers
+
+
+def ab_ratio(fn_a, fn_b, reps=25):
+    """Median us/call of two impls measured INTERLEAVED (a, b, a, b...)
+    so machine-load spikes hit both equally — sequential blocks make
+    impl-vs-impl ratios on shared runners swing by 50%."""
+    fn_a(), fn_b()
+    ta, tb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter(); fn_a(); ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter(); fn_b(); tb.append(time.perf_counter() - t0)
+    ta.sort(); tb.sort()
+    return ta[len(ta) // 2] * 1e6, tb[len(tb) // 2] * 1e6
 
 
 def csv_row(*cols):

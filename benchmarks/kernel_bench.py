@@ -1,55 +1,116 @@
 """Kernel micro-bench: lookup GEMM impls vs dense int matmul (wall time
 on CPU is illustrative only; the structural counts are the deliverable).
+
+Two shapes of the same compiled layer are timed:
+- 'decode'  (M=8)  — the paper's regime: static weights, repeated
+                     small-batch MACs (ServeLoop decodes at the slot
+                     count); this is the headline row
+- 'prefill' (M=64) — the larger-batch end of the serve path
+
+``impl='auto'`` exercises the shape-keyed autotuner (kernels/autotune.py):
+the first call on each shape tunes on the concrete operands and
+persists the winner, subsequent calls dispatch from the cache.  The
+headline ``speedup_auto_vs_xla`` is measured with interleaved A/B reps
+(common.ab_ratio) so shared-runner load noise cancels.  ``run(json_path
+=...)`` emits machine-readable ``BENCH_kernels.json`` so the perf
+trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
 
+import json
+import os
+
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv_row, timer
+from benchmarks.common import ab_ratio, csv_row, timer
 from repro.core.tlmac import compile_layer
-from repro.kernels import ops
+from repro.kernels import autotune, ops
+
+BENCH_SHAPE = dict(B_w=3, B_a=3, G=4, K=256, N=256, d_p=64)
+BATCHES = {"decode": 8, "prefill": 64}
+IMPLS = ("auto", "xla", "xla-kscan", "xla-flat",
+         "pallas", "pallas-onehot", "fused")
 
 
-def run(quiet=False):
+def run(quiet=False, json_path=None):
     rng = np.random.default_rng(0)
-    B_w, B_a, G = 3, 3, 4
-    K, N, M = 256, 256, 64
+    B_w, B_a, G = BENCH_SHAPE["B_w"], BENCH_SHAPE["B_a"], BENCH_SHAPE["G"]
+    K, N = BENCH_SHAPE["K"], BENCH_SHAPE["N"]
     w = rng.integers(-4, 4, size=(K, N))
-    plan = compile_layer(w, B_w=B_w, B_a=B_a, G=G, d_p=64, anneal_iters=500)
-    a = jnp.asarray(rng.integers(0, 2**B_a, size=(M, K)))
+    plan = compile_layer(w, B_w=B_w, B_a=B_a, G=G,
+                         d_p=BENCH_SHAPE["d_p"], anneal_iters=500)
     t = jnp.asarray(plan.table)
     e = jnp.asarray(plan.exec_idx)
     c = jnp.asarray(plan.step_cluster)
-    out = {}
-    _, us_dense = timer(
-        lambda: ops.dense_int_matmul(a, jnp.asarray(w)).block_until_ready()
-    )
-    out["dense_int"] = us_dense
+    out = {"us_per_call": {}, "speedup_auto_vs_xla": {}}
     if not quiet:
         csv_row("impl", "us_per_call")
-        csv_row("dense_int", f"{us_dense:.0f}")
-    _, us_bs = timer(
-        lambda: ops.bitserial_matmul(a, jnp.asarray(w), B_a).block_until_ready()
-    )
-    out["bitserial"] = us_bs
-    if not quiet:
-        csv_row("bitserial_eq3", f"{us_bs:.0f}")
-    for impl in ("xla", "pallas", "pallas-onehot"):
-        _, us = timer(
-            lambda impl=impl: ops.tlmac_matmul(
-                a, t, e, c, B_a=B_a, G=G, N=N, impl=impl
-            ).block_until_ready()
+    for label, M in BATCHES.items():
+        a = jnp.asarray(rng.integers(0, 2**B_a, size=(M, K)))
+        us = {}
+        _, us["dense_int"] = timer(
+            lambda: ops.dense_int_matmul(a, jnp.asarray(w)).block_until_ready()
         )
-        out[impl] = us
+        _, us["bitserial"] = timer(
+            lambda: ops.bitserial_matmul(
+                a, jnp.asarray(w), B_a).block_until_ready()
+        )
+        # 'auto' first: its warmup call runs the tuner once and persists
+        # the winner; the timed reps then measure the cached dispatch.
+        for impl in IMPLS:
+            _, us[impl] = timer(
+                lambda impl=impl: ops.tlmac_matmul(
+                    a, t, e, c, B_a=B_a, G=G, N=N, impl=impl
+                ).block_until_ready(),
+                reps=9,
+            )
+        # headline: autotuned dispatch vs the previous hard-coded
+        # default, interleaved so load noise hits both equally
+        us_auto, us_xla = ab_ratio(
+            lambda: ops.tlmac_matmul(
+                a, t, e, c, B_a=B_a, G=G, N=N, impl="auto"
+            ).block_until_ready(),
+            lambda: ops.tlmac_matmul(
+                a, t, e, c, B_a=B_a, G=G, N=N, impl="xla"
+            ).block_until_ready(),
+        )
+        speedup = us_xla / us_auto
+        out["us_per_call"][label] = us
+        out["speedup_auto_vs_xla"][label] = speedup
         if not quiet:
-            csv_row(f"tlmac_{impl}", f"{us:.0f}")
+            for k, v in us.items():
+                csv_row(f"{k}[{label} M={M}]", f"{v:.0f}")
+            csv_row(f"speedup_auto_vs_xla[{label}]", f"{speedup:.2f}x")
+    if json_path:
+        cfgs = {}
+        for label, M in BATCHES.items():
+            key = autotune.shape_key(
+                M, K, N, B_a=B_a, G=G, D_p=int(plan.exec_idx.shape[1]),
+                R=int(np.prod(plan.table.shape[:-1])),
+            )
+            cfgs[label] = autotune.lookup(key)
+        doc = {
+            "shape": BENCH_SHAPE,
+            "batches": BATCHES,
+            "us_per_call": out["us_per_call"],
+            "speedup_auto_vs_xla": out["speedup_auto_vs_xla"],
+            "auto_config": cfgs,
+            # no absolute cache path here: the artifact is git-tracked
+            # and machine-local paths would churn it per contributor
+            "autotune_cache_overridden": bool(os.environ.get(
+                autotune.CACHE_ENV)),
+        }
+        with open(json_path, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        if not quiet:
+            csv_row("json", json_path)
     return out
 
 
 def main():
-    run()
+    run(json_path="BENCH_kernels.json")
 
 
 if __name__ == "__main__":

@@ -36,6 +36,12 @@ def main():
     ap.add_argument("--shape", required=True)
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
     ap.add_argument("--set", nargs="*", default=[], help="field=value overrides")
+    ap.add_argument("--tlmac-impl", default=None,
+                    choices=["auto", "ref", "xla", "xla-kscan", "xla-flat"],
+                    help="shorthand for --set serve_tlmac_impl=<impl>; "
+                         "Pallas impls are excluded — they must not be "
+                         "embedded in TP-sharded serve graphs (see "
+                         "_SERVE_AUTO_ALLOW in models/nn.py)")
     ap.add_argument("--tag", required=True)
     ap.add_argument("--out", default="experiments/perf")
     args = ap.parse_args()
@@ -47,6 +53,8 @@ def main():
     for kv in args.set:
         k, v = kv.split("=", 1)
         overrides[k] = parse_val(v)
+    if args.tlmac_impl:
+        overrides["serve_tlmac_impl"] = args.tlmac_impl
 
     # patch the config module so run_cell's get_config sees the override
     mod_name = cb._ALIASES.get(args.arch, args.arch).replace("-", "_")

@@ -17,6 +17,9 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="fewer annealing iterations (CI mode)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--bench-json", default="BENCH_kernels.json",
+                    help="machine-readable kernel-bench output "
+                         "(impl -> us/call + auto-vs-xla speedup)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -40,7 +43,7 @@ def main() -> None:
         ("fig8_full_model", lambda: fig8_full_model.run(
             anneal_iters=iters or 1500)),
         ("tlmac_memory", tlmac_memory.run),
-        ("kernel_bench", kernel_bench.run),
+        ("kernel_bench", lambda: kernel_bench.run(json_path=args.bench_json)),
         ("roofline", roofline.run),
     ]
     for name, fn in benches:

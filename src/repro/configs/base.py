@@ -79,6 +79,14 @@ class ArchConfig:
     tlmac_narr_cap: int = 4096   # LUT-pool capacity budget for AOT shapes
     linear_impl: str = "qdq"     # train path: dense | qdq
     serve_impl: str = "tlmac"    # serve path: dense | int8 | tlmac
+    serve_tlmac_impl: str = "auto"  # lookup-GEMM impl for non-fused TP
+                                 # layers: auto (shape-keyed autotune
+                                 # cache, kernels/autotune.py) or any
+                                 # explicit ops.tlmac_matmul impl
+    serve_shared_act_quant: bool = True  # swiglu wi/wg share one
+                                 # activation quantise+pack (wi's
+                                 # a_step); disable for checkpoints
+                                 # calibrated per-branch
     # --- parallelism defaults ---
     fsdp: bool = False           # shard params over data axis too (ZeRO-3)
     pure_fsdp: bool = False      # drop TP: shard params over ALL axes,

@@ -3,4 +3,10 @@ from repro.kernels.ops import (  # noqa: F401
     bitserial_matmul,
     pack_bitplanes,
     dense_int_matmul,
+    dispatch_config,
 )
+from repro.kernels.tlmac_fused import (  # noqa: F401
+    tlmac_gemm_fused,
+    tlmac_matmul_fused,
+)
+from repro.kernels import autotune  # noqa: F401

@@ -1,0 +1,266 @@
+"""Shape-keyed autotuner backing ``ops.tlmac_matmul(impl="auto")``.
+
+FINN-R's lesson (arXiv 1809.04570) is that a lookup datapath only wins
+end-to-end when the folding/parallelism is *tuned per layer shape*; our
+analogue is the (impl × bm × bk × chunk × gather) configuration of the
+lookup GEMM.  The tuner:
+
+- times each candidate on the concrete operands (median of ``reps``
+  timed calls after a compile/warmup call),
+- verifies every candidate bit-exactly against ``ref.tlmac_matmul_ref``
+  before trusting its timing (a fast wrong kernel must never win),
+- persists winners to a JSON cache keyed by
+  ``(backend, M, K, N, B_a, G, D_p, R)`` so later processes — and
+  tracing contexts, which cannot time — reuse them.
+
+Cache file: ``$REPRO_TLMAC_AUTOTUNE_CACHE`` if set, else
+``~/.cache/repro/tlmac_autotune.json``.  Format (one entry per key)::
+
+    {
+      "v1|cpu|M64,K256,N256,Ba3,G4,dp64,R1024": {
+        "config": {"impl": "xla-flat"},
+        "us": 2291.4,
+        "baseline_us": {"xla": 3649.2},
+      },
+      ...
+    }
+
+``lookup`` is safe to call during jit tracing (pure host-side dict
+read); ``tune`` needs concrete arrays and is called eagerly — first
+concrete ``impl="auto"`` call on a new shape tunes once, then hits the
+cache forever.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+try:
+    import fcntl
+except ImportError:  # non-POSIX: fall back to merge-without-lock
+    fcntl = None
+
+CACHE_ENV = "REPRO_TLMAC_AUTOTUNE_CACHE"
+DEFAULT_IMPL = "xla"
+_SCHEMA = "v1"
+
+_lock = threading.RLock()
+_cache: Optional[Dict[str, Any]] = None
+_cache_file: Optional[str] = None
+# bumped on every record()/reset_cache(): lets callers (ops.tlmac_matmul)
+# memoise resolved configs and re-resolve only when the cache changed
+generation: int = 0
+
+
+# ---------------------------------------------------------------------------
+# cache persistence
+# ---------------------------------------------------------------------------
+
+
+def cache_path() -> str:
+    return os.environ.get(CACHE_ENV) or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro", "tlmac_autotune.json"
+    )
+
+
+def _load() -> Dict[str, Any]:
+    """Load (and memoise) the cache; reloads if the env path changed."""
+    global _cache, _cache_file
+    path = cache_path()
+    with _lock:
+        if _cache is not None and _cache_file == path:
+            return _cache
+        data: Dict[str, Any] = {}
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {}
+        _cache, _cache_file = data, path
+        return data
+
+
+def _save() -> None:
+    global _cache
+    path = cache_path()
+    with _lock:
+        data = _cache or {}
+        # merge the latest on-disk state under an exclusive file lock:
+        # another process may persist winners between our read and our
+        # os.replace — without the lock that window loses their update
+        # (read-modify-write race).  In-memory entries are newer for any
+        # key we both touched, so they win the merge.
+        try:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            lock_f = open(path + ".lock", "w")
+        except OSError:
+            return  # read-only FS: tuning still works, just not persisted
+        try:
+            if fcntl is not None:
+                fcntl.flock(lock_f, fcntl.LOCK_EX)
+            disk: Dict[str, Any] = {}
+            try:
+                with open(path) as f:
+                    disk = json.load(f)
+            except (OSError, ValueError):
+                disk = {}
+            disk.update(data)
+            _cache = data = disk
+            tmp = path + f".tmp{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except OSError:
+            pass  # read-only FS: tuning still works, just not persisted
+        finally:
+            lock_f.close()
+
+
+def reset_cache() -> None:
+    """Drop the in-memory cache (tests; or after changing the env path)."""
+    global _cache, _cache_file, generation
+    with _lock:
+        _cache, _cache_file = None, None
+        generation += 1
+
+
+# ---------------------------------------------------------------------------
+# keys and candidates
+# ---------------------------------------------------------------------------
+
+
+def shape_key(M: int, K: int, N: int, *, B_a: int, G: int, D_p: int,
+              R: int) -> str:
+    backend = jax.default_backend()
+    return (f"{_SCHEMA}|{backend}|M{M},K{K},N{N},"
+            f"Ba{B_a},G{G},dp{D_p},R{R}")
+
+
+def candidates(M: int, K: int, N: int, *, B_a: int, G: int,
+               include_pallas: Optional[bool] = None) -> List[Dict[str, Any]]:
+    """Candidate configs for a shape.  Pallas candidates only run where
+    they are compiled (TPU) — interpret mode timings are meaningless —
+    unless forced with ``REPRO_TLMAC_TUNE_PALLAS=1``."""
+    kg = K // G
+    cands: List[Dict[str, Any]] = [{"impl": "ref"}, {"impl": "xla-flat"}]
+    for chunk in (64, 128, 256, 512):
+        if chunk <= max(64, kg):
+            cands.append({"impl": "xla", "chunk": chunk})
+            cands.append({"impl": "xla-kscan", "chunk": chunk})
+    if include_pallas is None:
+        include_pallas = (
+            jax.default_backend() == "tpu"
+            or os.environ.get("REPRO_TLMAC_TUNE_PALLAS") == "1"
+        )
+    if include_pallas:
+        for gather in ("take", "onehot"):
+            for bm in (64, 128, 256):
+                for bk in (64, 128):
+                    cands.append({"impl": "fused", "bm": bm, "bk": bk,
+                                  "gather": gather})
+            cands.append({"impl": "pallas" if gather == "take"
+                          else "pallas-onehot"})
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# lookup / record / tune
+# ---------------------------------------------------------------------------
+
+
+def lookup(key: str) -> Optional[Dict[str, Any]]:
+    """Winning config for a shape key, or None.  Trace-safe."""
+    entry = _load().get(key)
+    return dict(entry["config"]) if entry else None
+
+
+def record(key: str, config: Dict[str, Any], us: float,
+           baseline_us: Optional[Dict[str, float]] = None) -> None:
+    global generation
+    with _lock:
+        data = _load()
+        data[key] = {"config": config, "us": us,
+                     "baseline_us": baseline_us or {}}
+        generation += 1
+        _save()
+
+
+def _time(fn, reps: int) -> float:
+    fn()  # compile + warmup
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def tune(
+    a_codes,
+    table,
+    exec_idx,
+    step_cluster,
+    *,
+    B_a: int,
+    G: int,
+    N: int,
+    reps: int = 5,
+    cands: Optional[List[Dict[str, Any]]] = None,
+    verify: bool = True,
+) -> Dict[str, Any]:
+    """Time candidates on concrete operands; persist and return the
+    winner's config.  Candidates that fail (shape constraints) or are
+    not bit-exact are discarded."""
+    from repro.kernels import ops, ref as _ref
+
+    M, K = a_codes.shape
+    D_p = exec_idx.shape[1]
+    key = shape_key(M, K, N, B_a=B_a, G=G, D_p=D_p,
+                    R=int(np.prod(table.shape[:-1])))
+    if cands is None:
+        cands = candidates(M, K, N, B_a=B_a, G=G)
+
+    want = (
+        np.asarray(_ref.tlmac_matmul_ref(
+            a_codes, table, exec_idx, step_cluster, B_a, G, N))
+        if verify else None
+    )
+    results: Dict[str, float] = {}
+    best_cfg, best_us = None, float("inf")
+    for cand in cands:
+        def run(cand=cand):
+            return ops.dispatch_config(
+                cand, a_codes, table, exec_idx, step_cluster,
+                B_a=B_a, G=G, N=N,
+            ).block_until_ready()
+        try:
+            if want is not None and not np.array_equal(np.asarray(run()), want):
+                continue
+            us = _time(run, reps)
+        except Exception:
+            continue
+        results[json.dumps(cand, sort_keys=True)] = us
+        if us < best_us:
+            best_cfg, best_us = cand, us
+    if best_cfg is None:  # everything failed: fall back, don't persist
+        return {"impl": DEFAULT_IMPL}
+    xla_us = [us for cfg_s, us in results.items()
+              if json.loads(cfg_s)["impl"] == "xla"]
+    baseline = {"xla": min(xla_us)} if xla_us else {}
+    record(key, best_cfg, best_us, baseline)
+    return dict(best_cfg)
+
+
+def lookup_or_default(M: int, K: int, N: int, *, B_a: int, G: int,
+                      D_p: int, R: int,
+                      default_impl: str = DEFAULT_IMPL) -> Dict[str, Any]:
+    """Trace-safe resolution: cached winner, else the given default."""
+    cfg = lookup(shape_key(M, K, N, B_a=B_a, G=G, D_p=D_p, R=R))
+    return cfg if cfg is not None else {"impl": default_impl}

@@ -1,28 +1,57 @@
 """Public jit'd kernel API with implementation dispatch.
 
 ``impl`` selects the execution path:
-- 'ref'     : obvious jnp oracle (tests, tiny shapes)
-- 'xla'     : memory-bounded XLA formulation — scan over k-group chunks,
-              gather + one-hot MXU contraction.  This is the path the
-              production serve graph lowers (CPU dry-run + TPU alike) and
-              the one the roofline reads.
-- 'pallas'  : the Pallas TPU kernel (interpret=True on CPU); gather='take'
+- 'ref'       : obvious jnp oracle (tests, tiny shapes)
+- 'xla'       : memory-bounded XLA formulation — scan over k-group
+                chunks, gather + one-hot MXU contraction.  This is the
+                path the production serve graph lowers (CPU dry-run +
+                TPU alike) and the one the roofline reads.
+- 'xla-kscan' : scan over k-chunks with a full [M, N] accumulator —
+                keeps n_tiles a sharded tensor dim for TP layers.
+- 'xla-flat'  : no scan at all — one gather + one one-hot GEMM per bit
+                plane.  Fastest when the [kg*2^G, N] expanded table fits
+                comfortably (small K or small N), pays full
+                materialisation otherwise.
+- 'pallas'    : the Pallas TPU kernel (interpret=True on CPU);
+                gather='take'
 - 'pallas-onehot' : Pallas kernel with MXU-only addressing
+- 'fused'     : the fused revisit-hoisted Pallas megakernel
+                (tlmac_fused.py): bit-plane packing fused in-kernel,
+                table gather hoisted out of the M loop
+- 'auto'      : shape-keyed autotuned dispatch (kernels/autotune.py).
+                Inside jit it resolves from the persisted cache (pure
+                host-side read at trace time) and falls back to
+                ``auto_default`` on a miss; called eagerly on concrete
+                arrays it tunes once and caches the winner.
 
 All paths are bit-exact in int32 and are asserted equal in tests.
+
+``codes=`` lets callers pass activations already packed with
+``pack_bitplanes`` so one packing feeds many GEMMs (q/k/v, swiglu
+wi/wg); the fused kernel instead consumes the *raw* codes and packs
+in-register.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.bitplanes import pack_bitplanes_pallas
+from repro.kernels.tlmac_fused import rowbase_from_plan, tlmac_matmul_fused
 from repro.kernels.tlmac_gemm import tlmac_gemm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# resolved-'auto'-config memo, invalidated by autotune.generation bumps
+_AUTO_MEMO: dict = {}
 
 
 def dense_int_matmul(a_codes: jnp.ndarray, w_codes: jnp.ndarray) -> jnp.ndarray:
@@ -43,14 +72,8 @@ def pack_bitplanes(
     return _ref.pack_bitplanes_ref(a_codes, B_a, G)
 
 
-def _rowbase(table, exec_idx, step_cluster, n_tiles, kg):
-    n_arr = table.shape[1]
-    D_p = exec_idx.shape[1]
-    rb = (
-        step_cluster.astype(jnp.int32)[:, None] * n_arr
-        + exec_idx.astype(jnp.int32)
-    )
-    return rb.reshape(n_tiles, kg, D_p)
+# single source of truth for the (select, switch) -> table-row flattening
+_rowbase = rowbase_from_plan
 
 
 @functools.partial(jax.jit, static_argnames=("B_a", "G", "N", "chunk"))
@@ -64,6 +87,7 @@ def tlmac_matmul_xla_kscan(
     G: int,
     N: int,
     chunk: int = 256,
+    codes: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Scan-over-k-chunks lookup GEMM (f32 [M, N] accumulator).
 
@@ -79,7 +103,8 @@ def tlmac_matmul_xla_kscan(
     kg = K // G
     C = 2**G
 
-    codes = _ref.pack_bitplanes_ref(a_codes, B_a, G)
+    if codes is None:
+        codes = _ref.pack_bitplanes_ref(a_codes, B_a, G)
     t2d = table.reshape(-1, C)
     rowbase = _rowbase(table, exec_idx, step_cluster, n_tiles, kg)
 
@@ -132,6 +157,7 @@ def tlmac_matmul_xla(
     chunk: int = 256,
     out_scale: Optional[jnp.ndarray] = None,
     out_dtype=None,
+    codes: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Lookup GEMM: outer scan over N-tiles, inner loop over k-chunks.
 
@@ -149,7 +175,8 @@ def tlmac_matmul_xla(
     kg = K // G
     C = 2**G
 
-    codes = _ref.pack_bitplanes_ref(a_codes, B_a, G)        # [B_a, M, kg]
+    if codes is None:
+        codes = _ref.pack_bitplanes_ref(a_codes, B_a, G)    # [B_a, M, kg]
     t2d = table.reshape(-1, C)
     rowbase = _rowbase(table, exec_idx, step_cluster, n_tiles, kg)
 
@@ -212,6 +239,117 @@ def tlmac_matmul_xla(
     return ys.transpose(1, 0, 2).reshape(M, N)
 
 
+@functools.partial(jax.jit, static_argnames=("B_a", "G", "N"))
+def tlmac_matmul_xla_flat(
+    a_codes: jnp.ndarray,
+    table: jnp.ndarray,
+    exec_idx: jnp.ndarray,
+    step_cluster: jnp.ndarray,
+    *,
+    B_a: int,
+    G: int,
+    N: int,
+    codes: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Scan-free lookup GEMM: one gather + one one-hot MXU dot per bit
+    plane over the *whole* [kg*C, N] expanded table.
+
+    No loop-carried state means XLA fuses the gather into the GEMM
+    prologue and the B_a dots run back-to-back — at decode/small-batch
+    shapes this beats the chunked scans by >1.5x (the scan's per-step
+    dispatch dominates).  The cost is materialising the full expanded
+    table, so it loses at large K*N; the autotuner arbitrates.
+    """
+    M, K = a_codes.shape
+    D_s, D_p = exec_idx.shape
+    n_tiles = N // D_p
+    kg = K // G
+    C = 2**G
+
+    if codes is None:
+        codes = _ref.pack_bitplanes_ref(a_codes, B_a, G)     # [B_a, M, kg]
+    t2d = table.reshape(-1, C)
+    rowbase = _rowbase(table, exec_idx, step_cluster, n_tiles, kg)
+
+    t_rows = t2d[rowbase].astype(jnp.bfloat16)               # [nt, kg, dp, C]
+    rhs = t_rows.transpose(1, 3, 0, 2).reshape(kg * C, N)
+    out = jnp.zeros((M, N), dtype=jnp.float32)
+    for b in range(B_a):
+        sel = jax.nn.one_hot(codes[b], C, dtype=jnp.bfloat16)
+        out = out + float(1 << b) * jax.lax.dot_general(
+            sel.reshape(M, kg * C), rhs,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("B_a", "G", "N"))
+def _tlmac_matmul_ref_jit(a_codes, table, exec_idx, step_cluster, *,
+                          B_a: int, G: int, N: int):
+    return _ref.tlmac_matmul_ref(
+        a_codes, table, exec_idx, step_cluster, B_a, G, N
+    )
+
+
+def dispatch_config(
+    config: Dict[str, Any],
+    a_codes: jnp.ndarray,
+    table: jnp.ndarray,
+    exec_idx: jnp.ndarray,
+    step_cluster: jnp.ndarray,
+    *,
+    B_a: int,
+    G: int,
+    N: int,
+    codes: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Run one autotuner candidate config (see kernels/autotune.py).
+    Always returns int32 [M, N]."""
+    impl = config["impl"]
+    if impl == "ref":
+        return _tlmac_matmul_ref_jit(
+            a_codes, table, exec_idx, step_cluster, B_a=B_a, G=G, N=N
+        )
+    if impl == "xla-flat":
+        return tlmac_matmul_xla_flat(
+            a_codes, table, exec_idx, step_cluster,
+            B_a=B_a, G=G, N=N, codes=codes,
+        ).astype(jnp.int32)
+    if impl == "xla":
+        return tlmac_matmul_xla(
+            a_codes, table, exec_idx, step_cluster,
+            B_a=B_a, G=G, N=N, chunk=config.get("chunk", 256), codes=codes,
+        ).astype(jnp.int32)
+    if impl == "xla-kscan":
+        return tlmac_matmul_xla_kscan(
+            a_codes, table, exec_idx, step_cluster,
+            B_a=B_a, G=G, N=N, chunk=config.get("chunk", 256), codes=codes,
+        ).astype(jnp.int32)
+    if impl == "fused":
+        return tlmac_matmul_fused(
+            a_codes, table, exec_idx, step_cluster,
+            B_a=B_a, G=G, N=N,
+            bm=config.get("bm", 128), bk=config.get("bk", 128),
+            gather=config.get("gather", "take"), interpret=_interpret(),
+        )
+    if impl in ("pallas", "pallas-onehot"):
+        M, K = a_codes.shape
+        kg = K // G
+        n_tiles = N // exec_idx.shape[1]
+        if codes is None:
+            codes = _ref.pack_bitplanes_ref(a_codes, B_a, G)
+        rowbase = _rowbase(table, exec_idx, step_cluster, n_tiles, kg)
+        return tlmac_gemm(
+            codes.astype(jnp.int32), rowbase, table.reshape(-1, 2**G),
+            B_a=B_a, G=G, N=N,
+            bm=config.get("bm", 128), bk=config.get("bk", 128),
+            gather="take" if impl == "pallas" else "onehot",
+            interpret=_interpret(),
+        )
+    raise ValueError(f"unknown impl {impl!r}")
+
+
 def tlmac_matmul(
     a_codes: jnp.ndarray,
     table: jnp.ndarray,
@@ -223,29 +361,66 @@ def tlmac_matmul(
     N: int,
     impl: str = "xla",
     chunk: int = 256,
+    codes: Optional[jnp.ndarray] = None,
+    auto_default: str = "xla",
+    auto_allow: Optional[tuple] = None,
+    tune_on_miss: bool = True,
 ) -> jnp.ndarray:
-    """Lookup-based quantised GEMM: int32 [M, N] == a_codes @ W_codes."""
+    """Lookup-based quantised GEMM: int32 [M, N] == a_codes @ W_codes.
+
+    ``auto`` knobs: ``auto_allow`` restricts which cached winners may be
+    dispatched (the serve path passes the XLA impls only — a winner
+    tuned on unsharded eager operands must not embed a Pallas call into
+    a TP-sharded graph); ``tune_on_miss=False`` makes a cache miss fall
+    back to ``auto_default`` instead of tuning synchronously (serving
+    must never pay a candidate sweep at request time)."""
     if impl == "ref":
         return _ref.tlmac_matmul_ref(
             a_codes, table, exec_idx, step_cluster, B_a, G, N
         )
-    if impl == "xla":
-        return tlmac_matmul_xla(
-            a_codes, table, exec_idx, step_cluster, B_a=B_a, G=G, N=N, chunk=chunk
-        ).astype(jnp.int32)
-    if impl == "xla-kscan":
-        return tlmac_matmul_xla_kscan(
-            a_codes, table, exec_idx, step_cluster, B_a=B_a, G=G, N=N, chunk=chunk
-        )
-    if impl in ("pallas", "pallas-onehot"):
+    if impl == "auto":
+        from repro.kernels import autotune
+
+        import numpy as _np
         M, K = a_codes.shape
-        kg = K // G
-        n_tiles = N // exec_idx.shape[1]
-        codes = _ref.pack_bitplanes_ref(a_codes, B_a, G)
-        rowbase = _rowbase(table, exec_idx, step_cluster, n_tiles, kg)
-        return tlmac_gemm(
-            codes, rowbase, table.reshape(-1, 2**G),
-            B_a=B_a, G=G, N=N,
-            gather="take" if impl == "pallas" else "onehot",
+        # memoise the resolved config: shape_key/lookup cost ~100s of us
+        # of host time per eager call otherwise, charged to every decode
+        memo_key = (M, K, N, B_a, G, exec_idx.shape[1],
+                    int(_np.prod(table.shape[:-1])), auto_allow,
+                    auto_default, tune_on_miss)
+        hit = _AUTO_MEMO.get(memo_key)
+        if hit is not None and hit[0] == autotune.generation:
+            config = hit[1]
+        else:
+            key = autotune.shape_key(
+                M, K, N, B_a=B_a, G=G, D_p=exec_idx.shape[1],
+                R=memo_key[6],
+            )
+            config = autotune.lookup(key)
+            if config is None:
+                if tune_on_miss and not isinstance(a_codes, jax.core.Tracer):
+                    config = autotune.tune(
+                        a_codes, table, exec_idx, step_cluster,
+                        B_a=B_a, G=G, N=N,
+                    )
+                else:
+                    # tracing (cannot time) or tuning disabled: fall
+                    # back, leave the cache untouched
+                    config = {"impl": auto_default}
+            # the restriction binds cached AND freshly tuned winners:
+            # the tuner may legitimately pick e.g. a Pallas impl, but
+            # this call site may not dispatch it (TP-sharded graph)
+            if auto_allow is not None and config["impl"] not in auto_allow:
+                config = {"impl": auto_default}
+            _AUTO_MEMO[memo_key] = (autotune.generation, config)
+        return dispatch_config(
+            config, a_codes, table, exec_idx, step_cluster,
+            B_a=B_a, G=G, N=N, codes=codes,
         )
-    raise ValueError(f"unknown impl {impl!r}")
+    config: Dict[str, Any] = {"impl": impl}
+    if impl in ("xla", "xla-kscan"):
+        config["chunk"] = chunk
+    return dispatch_config(
+        config, a_codes, table, exec_idx, step_cluster,
+        B_a=B_a, G=G, N=N, codes=codes,
+    )

@@ -89,11 +89,24 @@ def init_ffn(key, cfg, linear_init):
 
 
 def ffn_apply(params, x, cfg, apply_fn):
-    h = apply_fn(params["wi"], x, cfg)
-    if "wg" in params:
-        h = h * jax.nn.silu(apply_fn(params["wg"], x, cfg))
+    pair_apply = getattr(apply_fn, "pair_apply", None)
+    if (
+        pair_apply is not None
+        and getattr(cfg, "serve_shared_act_quant", True)
+        and "wg" in params
+    ):
+        # swiglu: wi and wg read the same tensor — an apply_fn that
+        # advertises pair_apply quantises and bit-plane-packs the
+        # activations once for both lookup GEMMs (and falls back to
+        # independent applies itself for non-tlmac layouts)
+        h, g = pair_apply(params["wi"], params["wg"], x, cfg)
+        h = h * jax.nn.silu(g)
     else:
-        h = jax.nn.gelu(h)
+        h = apply_fn(params["wi"], x, cfg)
+        if "wg" in params:
+            h = h * jax.nn.silu(apply_fn(params["wg"], x, cfg))
+        else:
+            h = jax.nn.gelu(h)
     return apply_fn(params["wo"], h, cfg)
 
 

@@ -261,47 +261,141 @@ def serve_linear_apply(params, x, cfg, use_bias: bool = False,
             COMPUTE_DTYPE
         )
     elif impl == "tlmac":
-        B_a, G = cfg.quant.a_bits, cfg.tlmac_G
-        lead = x.shape[:-1]
-        K = x.shape[-1]
-        n_tiles, kg, dp = params["exec_idx"].shape
-        N = n_tiles * dp
-        a_step = params["a_step"]
-        aq = jnp.clip(
-            jnp.round(x.astype(jnp.float32) / a_step), 0, 2**B_a - 1
-        ).astype(jnp.int8)
-        # MoE archs fare better with the fused N-tile scan on ALL serve
-        # matmuls (measured: kimi prefill 34.2 vs 21.8 GB/dev); dense
-        # archs keep the TP-sharded K-scan (mistral 9.2 vs 23.7).
-        fused = fused or cfg.n_experts > 0
-        if fused:
-            # expert path (vmapped): dequant fused into the GEMM's
-            # N-tile scan — no E simultaneous [M, N] f32 accumulators
-            y = kops.tlmac_matmul_xla(
-                aq.reshape(-1, K),
-                params["table"],
-                params["exec_idx"].reshape(n_tiles * kg, dp).astype(jnp.int32),
-                params["step_cluster"].reshape(-1).astype(jnp.int32),
-                B_a=B_a, G=G, N=N,
-                out_scale=(a_step * params["w_step"]).astype(jnp.float32),
-            )
-            y = y.reshape(*lead, N).astype(COMPUTE_DTYPE)
-        else:
-            # dense TP path: k-chunk scan keeps n_tiles sharded
-            yi = kops.tlmac_matmul(
-                aq.reshape(-1, K),
-                params["table"],
-                params["exec_idx"].reshape(n_tiles * kg, dp).astype(jnp.int32),
-                params["step_cluster"].reshape(-1).astype(jnp.int32),
-                B_a=B_a, G=G, N=N, impl="xla-kscan",
-            )
-            y = (yi * (a_step * params["w_step"])).astype(COMPUTE_DTYPE)
-            y = y.reshape(*lead, N)
+        aq, codes_fn = _tlmac_quant_pack(params["a_step"], x, cfg)
+        y = _tlmac_gemm(params, aq, codes_fn, x.shape[:-1], cfg, fused)
     else:
         raise ValueError(impl)
     if use_bias:
         y = y + params["b"].astype(y.dtype)
     return y
+
+
+def _tlmac_quant_pack(a_step, x, cfg):
+    """Quantise activations and pack bit-planes ONCE per input tensor.
+
+    Packing is the per-call host work the paper's PE does for free in
+    the LUT-array wiring; hoisting it out of the GEMM lets several
+    lookup GEMMs reading the same tensor (swiglu wi/wg via
+    ``serve_linear_pair_apply``) share a single pack.  Returns
+    ``(aq, codes_fn)`` — packing is lazy/memoised so impls that pack
+    in-kernel ('fused') or not at all never materialise the
+    [B_a, M, K/G] intermediate."""
+    B_a, G = cfg.quant.a_bits, cfg.tlmac_G
+    K = x.shape[-1]
+    aq = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / a_step), 0, 2**B_a - 1
+    ).astype(jnp.int8).reshape(-1, K)
+    cell = []
+
+    def codes_fn():
+        if not cell:
+            cell.append(kops.pack_bitplanes(aq, B_a, G))
+        return cell[0]
+
+    return aq, codes_fn
+
+
+# trace-time 'auto' dispatch inside model graphs may only pick XLA
+# impls: a winner tuned on unsharded eager operands must not embed a
+# Pallas call into a TP-sharded serve graph.  Under an active mesh the
+# set shrinks further to the scan impls whose accumulators stay sharded
+# — 'xla-flat'/'ref' materialise the full expanded table / [M, N]
+# intermediates, and 'xla' trades the sharded K-scan for the N-tile
+# scan: both are the per-device memory regression the measured comment
+# in _tlmac_gemm quantifies (mistral 9.2 vs 23.7 GB/dev).
+_SERVE_AUTO_ALLOW = ("ref", "xla", "xla-kscan", "xla-flat")
+_SERVE_AUTO_ALLOW_SHARDED = ("xla-kscan",)
+
+
+def _serve_auto_allow():
+    from repro.parallel.sharding import _active_axes
+
+    return (_SERVE_AUTO_ALLOW if _active_axes() is None
+            else _SERVE_AUTO_ALLOW_SHARDED)
+
+
+def _tlmac_gemm(params, aq, codes_fn, lead, cfg, fused: bool):
+    """One lookup GEMM from pre-quantised/packed activations."""
+    B_a, G = cfg.quant.a_bits, cfg.tlmac_G
+    n_tiles, kg, dp = params["exec_idx"].shape
+    N = n_tiles * dp
+    a_step = params["a_step"]
+    # MoE archs fare better with the fused N-tile scan on ALL serve
+    # matmuls (measured: kimi prefill 34.2 vs 21.8 GB/dev); dense
+    # archs keep the TP-sharded K-scan (mistral 9.2 vs 23.7).
+    fused = fused or cfg.n_experts > 0
+    if fused:
+        # expert path (vmapped): dequant fused into the GEMM's
+        # N-tile scan — no E simultaneous [M, N] f32 accumulators
+        y = kops.tlmac_matmul_xla(
+            aq,
+            params["table"],
+            params["exec_idx"].reshape(n_tiles * kg, dp).astype(jnp.int32),
+            params["step_cluster"].reshape(-1).astype(jnp.int32),
+            B_a=B_a, G=G, N=N, codes=codes_fn(),
+            out_scale=(a_step * params["w_step"]).astype(jnp.float32),
+        )
+        return y.reshape(*lead, N).astype(COMPUTE_DTYPE)
+    # dense TP path: autotuned dispatch; on an untuned shape inside jit
+    # it falls back to the k-chunk scan, which keeps n_tiles sharded.
+    # tune_on_miss=False: serving never pays a candidate sweep inline.
+    impl = getattr(cfg, "serve_tlmac_impl", "xla-kscan") or "xla-kscan"
+    allow = _serve_auto_allow()
+    if impl != "auto" and impl not in allow:
+        # the auto path filters disallowed winners silently (a cache is
+        # advisory); an EXPLICIT config asking for e.g. a Pallas impl in
+        # a sharded graph is a configuration error — fail loudly
+        raise ValueError(
+            f"serve_tlmac_impl={impl!r} cannot be embedded in this serve "
+            f"graph (allowed here: {allow}); Pallas/full-materialisation "
+            "impls are benchmark/TPU-single-device paths"
+        )
+    yi = kops.tlmac_matmul(
+        aq,
+        params["table"],
+        params["exec_idx"].reshape(n_tiles * kg, dp).astype(jnp.int32),
+        params["step_cluster"].reshape(-1).astype(jnp.int32),
+        B_a=B_a, G=G, N=N,
+        codes=None if impl == "fused" else codes_fn(),
+        impl=impl,
+        auto_default="xla-kscan",
+        auto_allow=_serve_auto_allow(),
+        tune_on_miss=False,
+    )
+    y = (yi * (a_step * params["w_step"])).astype(COMPUTE_DTYPE)
+    return y.reshape(*lead, N)
+
+
+def serve_linear_pair_apply(p1, p2, x, cfg):
+    """Two serve linears reading the SAME tensor (swiglu wi/wg).  For
+    tlmac pairs the activation quantiser and bit-plane packing run once
+    and both lookup GEMMs consume the shared packed codes; any other
+    param layout falls back to two independent applies, so callers
+    never need to introspect the params.
+
+    tlmac branches share the FIRST branch's activation step — same
+    tensor, same quantisation grid — which is what makes the shared
+    pack exact for both GEMMs.  That is a numerics decision: if the two
+    branches were calibrated to different a_steps, routing wg through
+    wi's grid changes its codes.  Callers gate on
+    ``cfg.serve_shared_act_quant`` (default True; set False for
+    checkpoints with per-branch activation calibration to fall back to
+    independent quantise+pack per branch)."""
+    if "table" not in p1 or "table" not in p2:
+        return (serve_linear_apply(p1, x, cfg),
+                serve_linear_apply(p2, x, cfg))
+    aq, codes_fn = _tlmac_quant_pack(p1["a_step"], x, cfg)
+    lead = x.shape[:-1]
+    y1 = _tlmac_gemm(p1, aq, codes_fn, lead, cfg, fused=False)
+    p2_shared = dict(p2, a_step=p1["a_step"])
+    y2 = _tlmac_gemm(p2_shared, aq, codes_fn, lead, cfg, fused=False)
+    return y1, y2
+
+
+# protocol attribute: an apply_fn that supports shared-input pair
+# application advertises it here; model code dispatches on the
+# attribute, never on function identity (wrappers can re-attach it)
+serve_linear_apply.pair_apply = serve_linear_pair_apply
 
 
 def serve_expert_linear_apply(params, xe, cfg):

@@ -1,9 +1,21 @@
 """Batched serving loop with slot-based continuous batching.
 
 Static decode batch of B slots; finished sequences free their slot and
-the next queued request is prefilled into it.  Decode runs the serve
+the next queued request is prefilled into it *mid-decode* — the freed
+slot does not idle until the whole batch drains.  Decode runs the serve
 path (TLMAC lookup GEMMs when cfg.serve_impl == 'tlmac') — the regime
-the paper targets: static weights, repeated small-batch MACs.
+the paper targets: static weights, repeated small-batch MACs.  The
+lookup-GEMM impl follows ``cfg.serve_tlmac_impl`` (default 'auto': the
+shape-keyed autotune cache, kernels/autotune.py).
+
+Refill mechanics: all slots share one scalar decode position ``pos``
+(prompts are left-padded).  A request admitted at decode step t is
+prefilled alone, left-padded to the current length S + t, and its
+prefill caches are written into the freed slot of the batch caches —
+so the very next ``decode_step`` advances it together with the
+still-running slots.  A queued prompt longer than the current length
+waits (FIFO is preserved; the shared position grows every step, so it
+is admitted as soon as it fits or at the next batch).
 """
 
 from __future__ import annotations
@@ -29,12 +41,21 @@ class Request:
 
 class ServeLoop:
     def __init__(self, params, cfg, batch_slots: int = 4, s_max: int = 128,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, refill_quantum: int = 4):
         self.params, self.cfg = params, cfg
         self.B, self.S_max = batch_slots, s_max
         self.eos_id = eos_id
+        # Admission happens only when the shared length L = S + step is
+        # a multiple of this quantum (or the prompt fits L exactly).
+        # Every distinct L is a distinct prefill shape => a fresh XLA
+        # trace/compile at request time; quantising L bounds the shape
+        # set to S_max/quantum + |distinct prompt lengths| at the cost
+        # of delaying an admission by at most quantum-1 decode steps.
+        self.refill_quantum = max(1, refill_quantum)
         self.queue = deque()
         self.done: List[Request] = []
+        self.refills = 0              # mid-decode slot refills (stats)
+        self._write_jit = None
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg)
         )
@@ -50,32 +71,112 @@ class ServeLoop:
             self._run_batch(batch)
         return self.done
 
+    # -- continuous batch ---------------------------------------------------
+
+    def _finish(self, slot):
+        slot["req"].output = np.asarray(slot["out"], np.int32)
+        self.done.append(slot["req"])
+
+    def _write_slot(self, caches, caches_one, i: int):
+        """Copy a 1-request prefill cache into batch slot i (axis 1 of
+        every [n_layers, B, ...] leaf).  Jitted with the batch caches
+        donated (off-CPU): the update then aliases the existing buffers
+        instead of copying the full multi-GB cache once per refill."""
+        if self._write_jit is None:
+            def write(cb, co, idx):
+                def upd(c, c1):
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        c, c1.astype(c.dtype), idx, axis=1
+                    )
+                return [
+                    jax.tree.map(upd, b, o) for b, o in zip(cb, co)
+                ]
+            donate = () if jax.default_backend() == "cpu" else (0,)
+            self._write_jit = jax.jit(write, donate_argnums=donate)
+        return self._write_jit(caches, caches_one, jnp.int32(i))
+
+    def _try_refill(self, caches, cur_np, L: int, slot_i: int):
+        """Admit the queue head into a freed slot if its prompt fits the
+        current shared length L and L is an admission point (quantum
+        multiple or exact prompt fit).  Returns (slots_entry, caches) or
+        (None, caches)."""
+        if not self.queue or len(self.queue[0].prompt) > L or L >= self.S_max:
+            return None, caches
+        if L % self.refill_quantum != 0 and L != len(self.queue[0].prompt):
+            return None, caches       # off-quantum: wait a step or two
+        req = self.queue.popleft()
+        toks = np.zeros((1, L), np.int32)
+        toks[0, L - len(req.prompt):] = req.prompt       # left-pad to L
+        logits, caches_one = lm.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.cfg,
+            S_max=self.S_max,
+        )
+        caches = self._write_slot(caches, caches_one, slot_i)
+        cur_np[slot_i, 0] = int(np.asarray(jnp.argmax(logits, -1))[0])
+        self.refills += 1
+        return {"req": req, "out": []}, caches
+
     def _run_batch(self, reqs: List[Request]):
         B = len(reqs)
         S = max(len(r.prompt) for r in reqs)
         toks = np.zeros((B, S), np.int32)
         for i, r in enumerate(reqs):
-            toks[i, S - len(r.prompt):] = r.prompt   # left-pad
+            toks[i, S - len(r.prompt):] = r.prompt       # left-pad
         batch = {"tokens": jnp.asarray(toks)}
-        logits, caches = lm.prefill(self.params, batch, self.cfg, S_max=self.S_max)
-        outs = [[] for _ in reqs]
-        alive = np.ones(B, bool)
-        cur = jnp.argmax(logits, -1)[:, None]
-        max_new = max(r.max_new_tokens for r in reqs)
-        for step in range(max_new):
+        logits, caches = lm.prefill(self.params, batch, self.cfg,
+                                    S_max=self.S_max)
+        slots = [{"req": r, "out": []} for r in reqs]
+        cur_np = np.array(jnp.argmax(logits, -1))[:, None]
+        step = 0
+        while True:
+            # 1) record the pending token per live slot; finish + free
             for i in range(B):
-                if alive[i]:
-                    outs[i].append(int(cur[i, 0]))
-                    if self.eos_id is not None and outs[i][-1] == self.eos_id:
-                        alive[i] = False
-                    if len(outs[i]) >= reqs[i].max_new_tokens:
-                        alive[i] = False
-            if not alive.any() or step == max_new - 1:
+                slot = slots[i]
+                if slot is None:
+                    continue
+                slot["out"].append(int(cur_np[i, 0]))
+                hit_eos = (self.eos_id is not None
+                           and slot["out"][-1] == self.eos_id)
+                if hit_eos or len(slot["out"]) >= slot["req"].max_new_tokens:
+                    self._finish(slot)
+                    slots[i] = None
+            # 2) continuous batching: refill freed slots from the queue.
+            #    The next decode writes cache position S + step, so the
+            #    refill prefill must cover exactly [0, S + step) and its
+            #    argmax token stands at position S + step — same shared
+            #    clock as the live slots.  That argmax IS the request's
+            #    first generated token: record it here, symmetric with
+            #    phase 1 recording the batch prefill's argmax at step 0
+            #    (a refilled request must not lose its first token).
+            for i in range(B):
+                while slots[i] is None:
+                    entry, caches = self._try_refill(
+                        caches, cur_np, S + step, i
+                    )
+                    if entry is None:
+                        break
+                    tok0 = int(cur_np[i, 0])
+                    entry["out"].append(tok0)
+                    done_now = (
+                        (self.eos_id is not None and tok0 == self.eos_id)
+                        or len(entry["out"]) >= entry["req"].max_new_tokens
+                    )
+                    if done_now:
+                        self._finish(entry)   # slot frees again: loop
+                    else:
+                        slots[i] = entry
+            if not any(s is not None for s in slots):
                 break
+            if S + step >= self.S_max:
+                # cache capacity exhausted: emit what we have
+                for i in range(B):
+                    if slots[i] is not None:
+                        self._finish(slots[i])
+                        slots[i] = None
+                break
+            # 3) one decode step for the whole batch
             logits, caches = self._decode(
-                self.params, caches, cur, jnp.int32(S + step)
+                self.params, caches, jnp.asarray(cur_np), jnp.int32(S + step)
             )
-            cur = jnp.argmax(logits, -1)[:, None]
-        for r, o in zip(reqs, outs):
-            r.output = np.asarray(o, np.int32)
-            self.done.append(r)
+            cur_np = np.array(jnp.argmax(logits, -1))[:, None]
+            step += 1

@@ -1,0 +1,85 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The real library is declared in pyproject's test extra; CI installs it.
+Environments without it (minimal containers) must still *collect and
+run* the suite, so property tests fall back to a fixed set of examples
+drawn with a seeded RNG from the same strategy descriptions.  Coverage
+is thinner than real shrinking/fuzzing but the invariants still run.
+
+Only the strategy subset this repo uses is implemented:
+``integers``, ``sampled_from``, ``booleans``.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+class _St:
+    integers = staticmethod(integers)
+    sampled_from = staticmethod(sampled_from)
+    booleans = staticmethod(booleans)
+
+
+st = _St()
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Records ``max_examples`` for a later ``given``; other knobs are
+    meaningless without the real engine and are ignored."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    """Run the test once per deterministic example (seeded RNG)."""
+
+    def deco(fn):
+        n = getattr(fn, "_fallback_max_examples", _DEFAULT_EXAMPLES)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0)
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide the drawn params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for name, p in sig.parameters.items()
+                        if name not in strategies]
+        )
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,4 +1,14 @@
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Isolate the TLMAC autotune cache: tests must neither read a
+# developer's tuned winners (a stale pallas winner would route serve
+# graphs through interpret mode) nor write to the user/shared cache —
+# so override unconditionally, even if the developer exported the var.
+# Tests that exercise persistence re-point it via monkeypatch.
+os.environ["REPRO_TLMAC_AUTOTUNE_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="tlmac_at_"), "autotune.json"
+)

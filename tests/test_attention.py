@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal containers: deterministic fallback engine
+    from _hypothesis_fallback import given, settings, st
 
 import repro.models.attention as A
 from repro.configs import smoke_config

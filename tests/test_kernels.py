@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal containers: deterministic fallback engine
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.tlmac import compile as tc
 from repro.kernels import ops
@@ -38,7 +41,8 @@ SWEEP = [
 def test_tlmac_matmul_all_impls_bitexact(K, N, M, B_w, B_a, G):
     a, w, t, e, c = _setup(K * 7 + G, K, N, M, B_w, B_a, G)
     ref = np.asarray(ops.dense_int_matmul(a, w))
-    for impl in ("ref", "xla", "pallas", "pallas-onehot"):
+    for impl in ("ref", "xla", "xla-kscan", "xla-flat",
+                 "pallas", "pallas-onehot", "fused"):
         out = np.asarray(
             ops.tlmac_matmul(a, t, e, c, B_a=B_a, G=G, N=N, impl=impl)
         )

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal containers: deterministic fallback engine
+    from _hypothesis_fallback import given, settings, st
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.data.pipeline import SyntheticLMData
@@ -181,8 +184,8 @@ def test_elastic_restore_resharding(tmp_path):
 
     tree = {"w": jnp.arange(32.0).reshape(4, 8)}
     save_checkpoint(str(tmp_path), 1, tree)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     shardings = {"w": NamedSharding(mesh, P(None, "model"))}
     restored, _ = restore_checkpoint(str(tmp_path), tree, shardings=shardings)
     np.testing.assert_array_equal(np.asarray(restored["w"]),

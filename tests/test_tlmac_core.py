@@ -3,7 +3,10 @@ LUT packing — unit + hypothesis property tests."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # minimal containers: deterministic fallback engine
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.tlmac import (
     anneal_routing,
