@@ -37,11 +37,14 @@ def main():
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
     ap.add_argument("--set", nargs="*", default=[], help="field=value overrides")
     ap.add_argument("--tlmac-impl", default=None,
-                    choices=["auto", "ref", "xla", "xla-kscan", "xla-flat"],
-                    help="shorthand for --set serve_tlmac_impl=<impl>; "
-                         "Pallas impls are excluded — they must not be "
-                         "embedded in TP-sharded serve graphs (see "
-                         "_SERVE_AUTO_ALLOW in models/nn.py)")
+                    choices=["auto", "xla-kscan"],
+                    help="shorthand for --set serve_tlmac_impl=<impl>. "
+                         "Only the impls embeddable in a TP-sharded serve "
+                         "graph are offered: under an active mesh "
+                         "_serve_auto_allow() shrinks to ('xla-kscan',) and "
+                         "any other EXPLICIT impl fails loudly at trace "
+                         "time (see models/nn.py); 'auto' filters its "
+                         "cached winner through the same allow-list")
     ap.add_argument("--tag", required=True)
     ap.add_argument("--out", default="experiments/perf")
     args = ap.parse_args()

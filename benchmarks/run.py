@@ -20,6 +20,9 @@ def main() -> None:
     ap.add_argument("--bench-json", default="BENCH_kernels.json",
                     help="machine-readable kernel-bench output "
                          "(impl -> us/call + auto-vs-xla speedup)")
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    help="machine-readable serve-bench output (paged vs "
+                         "dense decode latency + compile counts)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -28,6 +31,7 @@ def main() -> None:
         fig8_full_model,
         kernel_bench,
         roofline,
+        serve_bench,
         table1_block_area,
         tlmac_memory,
     )
@@ -44,6 +48,8 @@ def main() -> None:
             anneal_iters=iters or 1500)),
         ("tlmac_memory", tlmac_memory.run),
         ("kernel_bench", lambda: kernel_bench.run(json_path=args.bench_json)),
+        ("serve_bench", lambda: serve_bench.run(json_path=args.serve_json,
+                                                fast=args.fast)),
         ("roofline", roofline.run),
     ]
     for name, fn in benches:

@@ -22,6 +22,7 @@ import numpy as np
 from repro.configs import smoke_config
 from repro.models import lm
 from repro.serve.loop import Request, ServeLoop
+from repro.serve.paged import PagedServeLoop
 
 
 def main():
@@ -29,12 +30,20 @@ def main():
     ap.add_argument("--arch", default="xlstm-350m")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--dense-loop", action="store_true",
+                    help="force the dense-cache oracle loop even for "
+                         "paged-capable (gqa) archs")
     args = ap.parse_args()
 
     for impl in ("dense", "int8", "tlmac"):
         cfg = dataclasses.replace(smoke_config(args.arch), serve_impl=impl)
         params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
-        loop = ServeLoop(params, cfg, batch_slots=3, s_max=64)
+        paged = lm.supports_paged(cfg) and not args.dense_loop
+        if paged:
+            loop = PagedServeLoop(params, cfg, batch_slots=3, s_max=64,
+                                  page_size=8, chunk=8)
+        else:
+            loop = ServeLoop(params, cfg, batch_slots=3, s_max=64)
         rng = np.random.default_rng(0)
         for i in range(args.requests):
             loop.submit(Request(
@@ -46,8 +55,9 @@ def main():
         done = loop.run()
         dt = time.perf_counter() - t0
         toks = sum(len(r.output) for r in done)
-        print(f"[{impl:5s}] {len(done)} reqs, {toks} tokens in {dt:.2f}s "
-              f"({toks/dt:.1f} tok/s)")
+        kind = "paged" if paged else "dense-loop"
+        print(f"[{impl:5s}/{kind}] {len(done)} reqs, {toks} tokens in "
+              f"{dt:.2f}s ({toks/dt:.1f} tok/s)")
 
 
 if __name__ == "__main__":

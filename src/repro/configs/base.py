@@ -83,6 +83,10 @@ class ArchConfig:
                                  # layers: auto (shape-keyed autotune
                                  # cache, kernels/autotune.py) or any
                                  # explicit ops.tlmac_matmul impl
+    serve_paged_attn_impl: str = "auto"  # paged decode attention impl
+                                 # (kernels/paged.py): auto (shape-keyed
+                                 # autotune; lax on a cache miss), lax,
+                                 # flash-lax, or flash (Pallas split-K)
     serve_shared_act_quant: bool = True  # swiglu wi/wg share one
                                  # activation quantise+pack (wi's
                                  # a_step); disable for checkpoints

@@ -37,7 +37,7 @@ import json
 import os
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -147,7 +147,13 @@ def candidates(M: int, K: int, N: int, *, B_a: int, G: int,
                include_pallas: Optional[bool] = None) -> List[Dict[str, Any]]:
     """Candidate configs for a shape.  Pallas candidates only run where
     they are compiled (TPU) — interpret mode timings are meaningless —
-    unless forced with ``REPRO_TLMAC_TUNE_PALLAS=1``."""
+    unless forced with ``REPRO_TLMAC_TUNE_PALLAS=1``.
+
+    'pallas-onehot' is NOT a default candidate: its MXU-only addressing
+    measures ~2 orders of magnitude slower than every other impl at
+    bench shapes (~300 ms/call vs 1-4 ms), so sweeping it burns tuning
+    wall-clock for a candidate that never wins.  It stays reachable via
+    explicit ``impl='pallas-onehot'`` or ``REPRO_TLMAC_TUNE_ONEHOT=1``."""
     kg = K // G
     cands: List[Dict[str, Any]] = [{"impl": "ref"}, {"impl": "xla-flat"}]
     for chunk in (64, 128, 256, 512):
@@ -160,13 +166,15 @@ def candidates(M: int, K: int, N: int, *, B_a: int, G: int,
             or os.environ.get("REPRO_TLMAC_TUNE_PALLAS") == "1"
         )
     if include_pallas:
-        for gather in ("take", "onehot"):
+        include_onehot = os.environ.get("REPRO_TLMAC_TUNE_ONEHOT") == "1"
+        for gather in ("take",) + (("onehot",) if include_onehot else ()):
             for bm in (64, 128, 256):
                 for bk in (64, 128):
                     cands.append({"impl": "fused", "bm": bm, "bk": bk,
                                   "gather": gather})
-            cands.append({"impl": "pallas" if gather == "take"
-                          else "pallas-onehot"})
+        cands.append({"impl": "pallas"})
+        if include_onehot:
+            cands.append({"impl": "pallas-onehot"})
     return cands
 
 
@@ -202,6 +210,37 @@ def _time(fn, reps: int) -> float:
     return float(np.median(ts))
 
 
+def _ab(fn_a, fn_b, reps: int) -> Tuple[float, float]:
+    """Median us/call of two impls measured INTERLEAVED so machine-load
+    spikes hit both equally — the sweep's sequential per-candidate
+    medians drift under shared-runner load, and a near-tie decided by
+    that drift must not unseat the baseline."""
+    ta, tb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter(); fn_a(); ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter(); fn_b(); tb.append(time.perf_counter() - t0)
+    return float(np.median(ta) * 1e6), float(np.median(tb) * 1e6)
+
+
+def _rematch_and_record(key, best_cfg, best_us, baseline_cfg, baseline_us,
+                        make_run, reps: int, baseline_label: str):
+    """Shared commit policy for every tuner (GEMM and attention): the
+    winner must beat the baseline in an INTERLEAVED re-match, not just
+    in the sequential sweep — committing a near-tie decided by load
+    drift is how 'auto' ends up measurably slower than the default at
+    the same shape.  ``make_run(cfg)`` returns a warmed zero-arg timed
+    callable (the sweep's own, so nothing recompiles here)."""
+    if baseline_us is not None and best_cfg != baseline_cfg:
+        best_us, baseline_us = _ab(make_run(best_cfg),
+                                   make_run(baseline_cfg), max(reps, 9))
+        if best_us >= baseline_us:
+            best_cfg, best_us = baseline_cfg, baseline_us
+    baseline = ({baseline_label: baseline_us}
+                if baseline_us is not None else {})
+    record(key, best_cfg, best_us, baseline)
+    return dict(best_cfg)
+
+
 def tune(
     a_codes,
     table,
@@ -232,8 +271,15 @@ def tune(
             a_codes, table, exec_idx, step_cluster, B_a, G, N))
         if verify else None
     )
-    results: Dict[str, float] = {}
+    # the default-impl baseline is ALWAYS timed alongside the sweep —
+    # a cached winner that measures slower than what impl='xla' would
+    # have dispatched anyway is a regression, not a win (the committed
+    # winner must keep speedup_auto_vs_xla >= 1 at tune time)
+    baseline_cfg = {"impl": DEFAULT_IMPL}
+    if not any(c == baseline_cfg for c in cands):
+        cands = list(cands) + [baseline_cfg]
     best_cfg, best_us = None, float("inf")
+    baseline_us = None
     for cand in cands:
         def run(cand=cand):
             return ops.dispatch_config(
@@ -246,16 +292,21 @@ def tune(
             us = _time(run, reps)
         except Exception:
             continue
-        results[json.dumps(cand, sort_keys=True)] = us
+        if cand == baseline_cfg:
+            baseline_us = us
         if us < best_us:
             best_cfg, best_us = cand, us
     if best_cfg is None:  # everything failed: fall back, don't persist
         return {"impl": DEFAULT_IMPL}
-    xla_us = [us for cfg_s, us in results.items()
-              if json.loads(cfg_s)["impl"] == "xla"]
-    baseline = {"xla": min(xla_us)} if xla_us else {}
-    record(key, best_cfg, best_us, baseline)
-    return dict(best_cfg)
+
+    def make_run(cfg):
+        return lambda: ops.dispatch_config(
+            cfg, a_codes, table, exec_idx, step_cluster,
+            B_a=B_a, G=G, N=N,
+        ).block_until_ready()
+
+    return _rematch_and_record(key, best_cfg, best_us, baseline_cfg,
+                               baseline_us, make_run, reps, "xla")
 
 
 def lookup_or_default(M: int, K: int, N: int, *, B_a: int, G: int,
@@ -264,3 +315,108 @@ def lookup_or_default(M: int, K: int, N: int, *, B_a: int, G: int,
     """Trace-safe resolution: cached winner, else the given default."""
     cfg = lookup(shape_key(M, K, N, B_a=B_a, G=G, D_p=D_p, R=R))
     return cfg if cfg is not None else {"impl": default_impl}
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (kernels/paged.py) — same tuner, same cache
+# ---------------------------------------------------------------------------
+
+ATTN_DEFAULT_IMPL = "lax"
+
+
+def attn_shape_key(B: int, KV: int, rep: int, hd: int, MB: int, P: int,
+                   window=None) -> str:
+    backend = jax.default_backend()
+    w = "none" if window is None else int(window)
+    return (f"{_SCHEMA}|{backend}|attn|B{B},KV{KV},rep{rep},hd{hd},"
+            f"MB{MB},P{P},W{w}")
+
+
+def attention_candidates(
+        include_pallas: Optional[bool] = None) -> List[Dict[str, Any]]:
+    """Paged-attention candidates.  The Pallas flash kernel joins only
+    where it is compiled (TPU) — interpret timings are meaningless —
+    unless forced with ``REPRO_TLMAC_TUNE_PALLAS=1``."""
+    cands: List[Dict[str, Any]] = [{"impl": "lax"}, {"impl": "flash-lax"}]
+    if include_pallas is None:
+        include_pallas = (
+            jax.default_backend() == "tpu"
+            or os.environ.get("REPRO_TLMAC_TUNE_PALLAS") == "1"
+        )
+    if include_pallas:
+        for s in (1, 2, 4, 8):
+            cands.append({"impl": "flash", "n_splits": s})
+    return cands
+
+
+def tune_attention(
+    q,
+    k_pages,
+    v_pages,
+    block_table,
+    positions,
+    *,
+    window=None,
+    reps: int = 5,
+    cands: Optional[List[Dict[str, Any]]] = None,
+    verify: bool = True,
+) -> Dict[str, Any]:
+    """Verify-then-time tuning for paged decode attention.
+
+    Same contract as ``tune`` with one necessary relaxation: the lookup
+    GEMMs are integer and candidates must be *bit*-exact, but attention
+    is float and the flash paths legitimately reassociate the softmax
+    reduction — candidates are verified against the ``lax`` oracle to a
+    tolerance far below anything that could flip a greedy argmax, then
+    timed.  The winner persists under an ``attn|`` shape key in the
+    same JSON cache."""
+    from repro.kernels import paged
+
+    B, _, H, hd = q.shape
+    KV = k_pages.shape[2]
+    key = attn_shape_key(B, KV, H // KV, hd, block_table.shape[1],
+                         k_pages.shape[1], window)
+    if cands is None:
+        cands = attention_candidates()
+    want = (
+        np.asarray(paged.dispatch_attention(
+            {"impl": "lax"}, q, k_pages, v_pages, block_table, positions,
+            window=window), np.float32)
+        if verify else None
+    )
+    best_cfg, best_us = None, float("inf")
+    baseline_us = None
+    runners: Dict[str, Any] = {}   # warmed jitted callables by config
+    for cand in cands:
+        # time the candidate JITTED — that is how it runs inside the
+        # serve graph; eager timing would charge flash-lax's fori_loop
+        # one dispatch per page block and invert the ranking
+        jitted = jax.jit(
+            lambda q_, k_, v_, bt_, pos_, cand=cand:
+            paged.dispatch_attention(cand, q_, k_, v_, bt_, pos_,
+                                     window=window)
+        )
+
+        def run(jitted=jitted):
+            return jitted(
+                q, k_pages, v_pages, block_table, positions
+            ).block_until_ready()
+        try:
+            if want is not None and not np.allclose(
+                    np.asarray(run(), np.float32), want,
+                    rtol=2e-2, atol=2e-2):
+                continue
+            us = _time(run, reps)
+        except Exception:
+            continue
+        runners[json.dumps(cand, sort_keys=True)] = run
+        if cand == {"impl": ATTN_DEFAULT_IMPL}:
+            baseline_us = us
+        if us < best_us:
+            best_cfg, best_us = cand, us
+    if best_cfg is None:
+        return {"impl": ATTN_DEFAULT_IMPL}
+    return _rematch_and_record(
+        key, best_cfg, best_us, {"impl": ATTN_DEFAULT_IMPL}, baseline_us,
+        lambda cfg: runners[json.dumps(cfg, sort_keys=True)], reps, "lax",
+    )

@@ -1,0 +1,177 @@
+"""Pallas split-K flash-decode over a paged KV cache.
+
+FlashDecoding for the serve path: one query token per slot, K/V read
+through the block table (kernels/paged.py layout), online softmax run
+per split of the page range, partials combined outside the kernel.
+
+Grid ``(B, KV, n_splits, blocks_per_split)`` — the last dim is
+innermost/sequential, so the online-softmax state for one (slot,
+kv-head, split) lives in VMEM scratch across its block steps and is
+flushed to the partial outputs on the split's final step.
+
+GQA head-packing: the ``rep`` query heads sharing one KV head are
+packed as the rows of a single ``[rep, hd]`` operand, so each page
+visit is one ``[rep, hd] x [hd, P]`` MXU contraction instead of
+``rep`` vector products.
+
+The block table and per-slot lengths ride in scalar prefetch: the K/V
+page BlockSpecs *compute their HBM block index from the table*, which
+is what makes the cache paged as far as the kernel is concerned.
+Invalid steps (beyond a slot's valid pages) map to physical page 0 —
+the pool's scratch page — and skip their compute under ``pl.when``;
+since consecutive revisits of the same block index skip the copy, the
+wasted traffic is one scratch page, not O(S_max).
+
+Numerics: fully-masked visits never poison the running max because
+masked probabilities are zeroed explicitly (``where(mask, exp, 0)``)
+rather than trusting ``exp(NEG_INF - m)`` to underflow.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    bt_ref,       # [B, MB] int32   scalar prefetch: block table
+    len_ref,      # [B]     int32   scalar prefetch: per-slot lengths
+    q_ref,        # [1, 1, rep, hd]
+    k_ref,        # [1, P, 1, hd]   one page, one kv head
+    v_ref,        # [1, P, 1, hd]
+    o_ref,        # [1, 1, 1, rep, hd] f32 partial
+    m_ref,        # [1, 1, 1, rep, hd] f32 running max (lane-broadcast)
+    l_ref,        # [1, 1, 1, rep, hd] f32 running denom
+    acc_s,        # VMEM scratch [rep, hd] f32
+    m_s,          # VMEM scratch [rep, hd] f32
+    l_s,          # VMEM scratch [rep, hd] f32
+    *,
+    P: int,
+    bps: int,
+    window: Optional[int],
+):
+    b = pl.program_id(0)
+    s = pl.program_id(2)
+    i = pl.program_id(3)
+    blk = s * bps + i
+    L = len_ref[b]
+    rep, hd = acc_s.shape
+
+    @pl.when(i == 0)
+    def _init():
+        acc_s[:] = jnp.zeros_like(acc_s)
+        m_s[:] = jnp.full_like(m_s, NEG_INF)
+        l_s[:] = jnp.zeros_like(l_s)
+
+    @pl.when(blk * P < L)
+    def _visit():
+        q = q_ref[0, 0].astype(jnp.float32)              # [rep, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # [P, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        scale = 1.0 / math.sqrt(hd)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                        # [rep, P]
+        jpos = blk * P + jax.lax.broadcasted_iota(jnp.int32, (rep, P), 1)
+        msk = jpos < L
+        if window is not None:
+            msk &= jpos > (L - 1) - window
+        m_old = m_s[:, :1]                               # [rep, 1]
+        row_max = jnp.max(jnp.where(msk, scores, NEG_INF), axis=1,
+                          keepdims=True)
+        m_new = jnp.maximum(m_old, row_max)
+        p = jnp.where(msk, jnp.exp(scores - m_new), 0.0)
+        corr = jnp.exp(m_old - m_new)
+        l_new = l_s[:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_s[:] = acc_s[:] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_s[:] = jnp.broadcast_to(m_new, (rep, hd))
+        l_s[:] = jnp.broadcast_to(l_new, (rep, hd))
+
+    @pl.when(i == bps - 1)
+    def _flush():
+        o_ref[0, 0, 0] = acc_s[:]
+        m_ref[0, 0, 0] = m_s[:]
+        l_ref[0, 0, 0] = l_s[:]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "n_splits", "interpret")
+)
+def flash_decode(
+    q: jnp.ndarray,            # [B, KV, rep, hd]
+    k_pages: jnp.ndarray,      # [n_pages, P, KV, hd]
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,  # [B, MB] int32
+    lengths: jnp.ndarray,      # [B] int32 (valid tokens = pos + 1)
+    *,
+    window: Optional[int] = None,
+    n_splits: int = 4,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Split-K paged flash decode; returns ``[B, KV, rep, hd]`` f32."""
+    B, KV, rep, hd = q.shape
+    _, P, _, _ = k_pages.shape
+    MB = block_table.shape[1]
+    n_splits = max(1, min(n_splits, MB))
+    bps = -(-MB // n_splits)   # blocks per split
+
+    bt = block_table.astype(jnp.int32)
+    lens = lengths.astype(jnp.int32)
+
+    def kv_index(b, g, s, i, bt_ref, len_ref):
+        blk = s * bps + i
+        valid = blk * P < len_ref[b]
+        pid = jnp.where(valid, bt_ref[b, jnp.minimum(blk, MB - 1)], 0)
+        return (pid, 0, g, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_splits, bps),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda b, g, s, i, *_: (b, g, 0, 0)),
+            pl.BlockSpec((1, P, 1, hd), kv_index),
+            pl.BlockSpec((1, P, 1, hd), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, rep, hd),
+                         lambda b, g, s, i, *_: (b, g, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, rep, hd),
+                         lambda b, g, s, i, *_: (b, g, s, 0, 0)),
+            pl.BlockSpec((1, 1, 1, rep, hd),
+                         lambda b, g, s, i, *_: (b, g, s, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+            pltpu.VMEM((rep, hd), jnp.float32),
+        ],
+    )
+    part = jax.ShapeDtypeStruct((B, KV, n_splits, rep, hd), jnp.float32)
+    o_p, m_p, l_p = pl.pallas_call(
+        functools.partial(_kernel, P=P, bps=bps, window=window),
+        grid_spec=grid_spec,
+        out_shape=[part, part, part],
+        interpret=interpret,
+    )(bt, lens, q, k_pages, v_pages)
+
+    # combine split partials (FlashDecoding reduction); empty splits
+    # carry (acc=0, m=NEG_INF, l=0) and contribute exact zeros
+    m = m_p[..., 0]                                      # [B,KV,S,rep]
+    l = l_p[..., 0]
+    m_tot = jnp.max(m, axis=2)                           # [B,KV,rep]
+    w = jnp.exp(m - m_tot[:, :, None])
+    l_tot = jnp.sum(l * w, axis=2)
+    o = jnp.sum(o_p * w[..., None], axis=2)
+    return o / jnp.maximum(l_tot, 1e-30)[..., None]

@@ -1,0 +1,269 @@
+"""Paged KV cache primitives + paged decode attention dispatch.
+
+The serving memory path (serve/paged.py) stores every attention layer's
+K/V in fixed-size **pages** drawn from a per-layer physical pool::
+
+    k_pages, v_pages : [n_pages, page_size, KV, hd]   (bf16)
+
+A per-slot **block table** ``[B, max_blocks] int32`` maps logical block
+``j`` of slot ``b`` to a physical page; the same table indexes every
+layer's pool (all pools have identical structure).  Physical page 0 is
+a *scratch* page the manager never hands out: idle slots' writes land
+there and freed rows are reset to it, so a stale block-table row can
+never alias a live slot's pages.
+
+Why pages: admission/finish become page-list alloc/free (no multi-GB
+cache copies), the decode compute graph is shape-stable (``max_blocks``
+is fixed, so the serve loop compiles exactly one decode step), and the
+flash-decode paths bound their work by the *valid* page count instead
+of ``S_max`` — the O(S_max) dense-cache traffic per token the dense
+path pays is gone.
+
+``paged_attention`` impls (``dispatch_attention`` runs one):
+
+- ``lax``        gather pages + masked softmax.  Bit-exact with the
+                 dense-cache decode path (`models/attention._sdpa`):
+                 identical einsum contractions, identical NEG_INF
+                 masking — masked lanes contribute exact float zeros,
+                 so the extra padded keys never perturb a bit.  The
+                 oracle, and the trace-time fallback.
+- ``flash-lax``  FlashDecoding in pure lax: online softmax over page
+                 blocks with a *dynamic* trip count (``fori_loop`` up
+                 to the longest live slot's block) — per-token work is
+                 O(context), not O(S_max).  The production CPU path.
+- ``flash``      the Pallas split-K kernel (kernels/flash_decode.py):
+                 GQA head-packing, per-(slot, kv-head, split) grid,
+                 block table via scalar prefetch.  TPU hot path.
+- ``auto``       shape-keyed autotune (kernels/autotune.py): candidates
+                 are verified against the ``lax`` oracle, then timed;
+                 trace-time lookups are pure host-side cache reads and
+                 fall back to ``lax`` on a miss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # matches models/attention.NEG_INF (bit-exact masking)
+
+
+@dataclasses.dataclass(frozen=True)
+class PageSpec:
+    """Static geometry of a paged KV pool (hashable: jit-static arg)."""
+
+    page_size: int     # tokens per page
+    n_pages: int       # physical pages per layer pool (page 0 = scratch)
+    max_blocks: int    # block-table width == ceil(S_max / page_size)
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable tokens (scratch page excluded)."""
+        return (self.n_pages - 1) * self.page_size
+
+    @property
+    def s_alloc(self) -> int:
+        """Gathered sequence length: max_blocks * page_size."""
+        return self.max_blocks * self.page_size
+
+
+def spec_for(S_max: int, batch_slots: int, page_size: int = 16,
+             n_pages: Optional[int] = None) -> PageSpec:
+    """Pool geometry for a serve loop: by default capacity parity with
+    the dense cache (every slot can grow to S_max) plus the scratch
+    page.  Pass a smaller ``n_pages`` to oversubscribe."""
+    max_blocks = -(-S_max // page_size)
+    if n_pages is None:
+        n_pages = batch_slots * max_blocks + 1
+    return PageSpec(page_size=page_size, n_pages=n_pages,
+                    max_blocks=max_blocks)
+
+
+# ---------------------------------------------------------------------------
+# page writes / reads
+# ---------------------------------------------------------------------------
+
+
+def write_decode(k_pages, v_pages, k, v, block_table, positions):
+    """Write one decode token per slot.
+
+    k/v ``[B, 1, KV, hd]``; ``positions [B]`` is each slot's write
+    position (== its current length).  Idle slots' block-table rows are
+    all zeros, so their writes land in the scratch page."""
+    P = k_pages.shape[1]
+    blk = positions // P
+    pid = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+    off = positions % P
+    kp = k_pages.at[pid, off].set(k[:, 0].astype(k_pages.dtype))
+    vp = v_pages.at[pid, off].set(v[:, 0].astype(v_pages.dtype))
+    return kp, vp
+
+
+def write_chunk(k_pages, v_pages, k, v, block_table_row, start):
+    """Write one fixed-size prefill chunk into a slot's pages.
+
+    k/v ``[1, C, KV, hd]``; ``block_table_row [max_blocks]``; ``start``
+    is the chunk's first absolute position.  The padded tail of the
+    last chunk writes garbage *within the slot's own allocated pages*
+    (admission allocates up to the padded chunk length); those
+    positions sit beyond ``len`` so every read masks them, and decode
+    overwrites each one before it becomes visible."""
+    C = k.shape[1]
+    P = k_pages.shape[1]
+    pos = start + jnp.arange(C)
+    pid = block_table_row[pos // P]
+    off = pos % P
+    kp = k_pages.at[pid, off].set(k[0].astype(k_pages.dtype))
+    vp = v_pages.at[pid, off].set(v[0].astype(v_pages.dtype))
+    return kp, vp
+
+
+def gather_kv(k_pages, v_pages, block_table):
+    """Materialise per-slot K/V ``[B, s_alloc, KV, hd]`` through the
+    block table (the lax paths; the flash paths never call this)."""
+    B, MB = block_table.shape
+    _, P, KV, hd = k_pages.shape
+    kc = k_pages[block_table].reshape(B, MB * P, KV, hd)
+    vc = v_pages[block_table].reshape(B, MB * P, KV, hd)
+    return kc, vc
+
+
+# ---------------------------------------------------------------------------
+# attention impls
+# ---------------------------------------------------------------------------
+
+
+def _attend_lax(q, k_pages, v_pages, block_table, positions,
+                window: Optional[int]):
+    """Gather + masked softmax — the same contraction/mask sequence as
+    models/attention._sdpa_direct, so it is bit-exact with the dense
+    decode path (masked keys contribute exact zeros)."""
+    B, Sq, H, dk = q.shape
+    KV = k_pages.shape[2]
+    rep = H // KV
+    kc, vc = gather_kv(k_pages, v_pages, block_table)
+    S = kc.shape[1]
+    j = jnp.arange(S)[None, :]
+    mask = j <= positions[:, None]
+    if window is not None:
+        mask &= j > positions[:, None] - window
+    mask = mask[:, None, None, None, :]                  # [B,1,1,1,S]
+    qg = q.reshape(B, Sq, KV, rep, dk)
+    scale = 1.0 / math.sqrt(dk)
+    scores = jnp.einsum(
+        "bqkrh,bskh->bkrqs", qg.astype(jnp.float32), kc.astype(jnp.float32)
+    ) * scale
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkrqs,bskh->bkrqh", w, vc.astype(jnp.float32))
+    dv = vc.shape[-1]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H * dv).astype(q.dtype)
+
+
+def _attend_flash_lax(q, k_pages, v_pages, block_table, positions,
+                      window: Optional[int]):
+    """FlashDecoding in pure lax: online softmax over page blocks with a
+    dynamic trip count — work is O(longest live context), never
+    O(s_alloc).  Fully-masked blocks are handled by zeroing masked
+    probabilities (not by trusting the running max)."""
+    B, Sq, H, dk = q.shape
+    _, P, KV, hd = k_pages.shape
+    rep = H // KV
+    qg = q.reshape(B, KV, rep, dk).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(dk)
+    n_blocks = jnp.max(positions) // P + 1               # dynamic bound
+
+    def body(i, carry):
+        m, l, acc = carry
+        pid = block_table[:, i]                          # [B]
+        kb = k_pages[pid].astype(jnp.float32)            # [B,P,KV,hd]
+        vb = v_pages[pid].astype(jnp.float32)
+        s = jnp.einsum("bkrh,bskh->bkrs", qg, kb) * scale
+        jpos = i * P + jnp.arange(P)
+        msk = jpos[None, :] <= positions[:, None]
+        if window is not None:
+            msk &= jpos[None, :] > positions[:, None] - window
+        msk = msk[:, None, None, :]
+        row_max = jnp.max(jnp.where(msk, s, NEG_INF), axis=-1)
+        m_new = jnp.maximum(m, row_max)
+        p = jnp.where(msk, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkrs,bskh->bkrh", p, vb)
+        return m_new, l, acc
+
+    m0 = jnp.full((B, KV, rep), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, rep), jnp.float32)
+    a0 = jnp.zeros((B, KV, rep, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]         # [B,KV,rep,hd]
+    return out.reshape(B, 1, H * hd).astype(q.dtype)
+
+
+def dispatch_attention(config, q, k_pages, v_pages, block_table, positions,
+                       *, window: Optional[int] = None,
+                       interpret: Optional[bool] = None):
+    """Run one paged-attention candidate config.  q ``[B, 1, H, hd]``;
+    returns ``[B, 1, H*hd]`` in q.dtype."""
+    impl = config["impl"]
+    if impl == "lax":
+        return _attend_lax(q, k_pages, v_pages, block_table, positions,
+                           window)
+    if impl == "flash-lax":
+        return _attend_flash_lax(q, k_pages, v_pages, block_table,
+                                 positions, window)
+    if impl == "flash":
+        from repro.kernels.flash_decode import flash_decode
+
+        B, Sq, H, hd = q.shape
+        KV = k_pages.shape[2]
+        rep = H // KV
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        out = flash_decode(
+            q.reshape(B, KV, rep, hd), k_pages, v_pages, block_table,
+            positions + 1, window=window,
+            n_splits=config.get("n_splits", 4), interpret=interpret,
+        )
+        return out.reshape(B, 1, H * hd).astype(q.dtype)
+    raise ValueError(f"unknown paged attention impl {impl!r}")
+
+
+def paged_attention(q, k_pages, v_pages, block_table, positions, *,
+                    window: Optional[int] = None, impl: str = "auto",
+                    tune_on_miss: bool = False):
+    """Paged decode attention with autotuned dispatch.
+
+    ``impl='auto'`` resolves through the shape-keyed cache
+    (kernels/autotune.py, same verify-then-time contract as the lookup
+    GEMMs); inside jit the lookup is a pure host-side read and a miss
+    lowers the ``lax`` oracle.  ``tune_on_miss`` only fires on concrete
+    operands (benchmarks pre-tune; serving never sweeps inline)."""
+    if impl != "auto":
+        return dispatch_attention(
+            {"impl": impl}, q, k_pages, v_pages, block_table, positions,
+            window=window,
+        )
+    from repro.kernels import autotune
+
+    B, Sq, H, hd = q.shape
+    KV = k_pages.shape[2]
+    key = autotune.attn_shape_key(
+        B, KV, H // KV, hd, block_table.shape[1], k_pages.shape[1],
+        window,
+    )
+    config = autotune.lookup(key)
+    if config is None:
+        if tune_on_miss and not isinstance(q, jax.core.Tracer):
+            config = autotune.tune_attention(
+                q, k_pages, v_pages, block_table, positions, window=window,
+            )
+        else:
+            config = {"impl": "lax"}
+    return dispatch_attention(
+        config, q, k_pages, v_pages, block_table, positions, window=window,
+    )

@@ -215,6 +215,70 @@ def gqa_decode(params, x, cfg, cache, pos, window: Optional[int] = None,
 
 
 # ---------------------------------------------------------------------------
+# Paged decode / chunked prefill (serve path; kernels/paged.py layout)
+# ---------------------------------------------------------------------------
+
+
+def gqa_decode_paged(params, x, cfg, pages, block_table, positions,
+                     window: Optional[int] = None,
+                     apply_fn=nn.linear_apply, impl: str = "auto"):
+    """Single-token decode against a paged KV pool.
+
+    ``pages = (k_pages, v_pages) [n_pages, P, KV, hd]``; ``positions
+    [B]`` per-slot write positions (no shared clock — slots at
+    different depths decode together).  Attention reads through the
+    block table via ``kernels.paged.paged_attention`` (lax oracle /
+    flash-lax / Pallas flash kernel per ``impl``)."""
+    from repro.kernels import paged
+
+    B = x.shape[0]
+    q, k, v = _qkv(params, x, cfg, apply_fn)  # S == 1
+    sin, cos = nn.rotary_embedding(positions[:, None], cfg.kv_head_dim)
+    q = nn.apply_rotary(q, sin, cos)
+    k = nn.apply_rotary(k, sin, cos)
+    kp, vp = paged.write_decode(pages[0], pages[1], k, v, block_table,
+                                positions)
+    out = paged.paged_attention(q, kp, vp, block_table, positions,
+                                window=window, impl=impl)
+    y = apply_fn(params["wo"], out, cfg)
+    return y, (kp, vp)
+
+
+def gqa_prefill_chunk(params, x, cfg, pages, block_table_row, start,
+                      window: Optional[int] = None,
+                      apply_fn=nn.linear_apply):
+    """One fixed-size prefill chunk (B == 1) against a paged KV pool.
+
+    The chunk's K/V are written to the slot's pages first, then all of
+    the slot's pages are read back and causally masked per query
+    position — the same full-padded-read decode uses, so chunked
+    prefill is bit-exact with the one-shot dense prefill (masked keys
+    contribute exact zeros).  Every chunk has the same shape: the whole
+    prefill compile set is this one trace."""
+    from repro.kernels import paged
+
+    B, C, _ = x.shape
+    q, k, v = _qkv(params, x, cfg, apply_fn)
+    positions = start + jnp.arange(C)[None, :]
+    sin, cos = nn.rotary_embedding(positions, cfg.kv_head_dim)
+    q = nn.apply_rotary(q, sin, cos)
+    k = nn.apply_rotary(k, sin, cos)
+    kp, vp = paged.write_chunk(pages[0], pages[1], k, v, block_table_row,
+                               start)
+    kc, vc = paged.gather_kv(kp, vp, block_table_row[None])
+    S_alloc = kc.shape[1]
+    iq = start + jnp.arange(C)[:, None]
+    ik = jnp.arange(S_alloc)[None, :]
+    mask = ik <= iq
+    if window is not None:
+        mask &= ik > iq - window
+    out = _sdpa(q, kc, vc, mask, cfg)
+    H, hd = cfg.n_heads, cfg.kv_head_dim
+    y = apply_fn(params["wo"], out.reshape(B, C, H * hd), cfg)
+    return y, (kp, vp)
+
+
+# ---------------------------------------------------------------------------
 # MLA — Multi-head Latent Attention (DeepSeek-V3 / Kimi-K2)
 # ---------------------------------------------------------------------------
 

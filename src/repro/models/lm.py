@@ -146,10 +146,40 @@ def init_block(key, kind: str, cfg, linear_init):
     return p, a
 
 
-def zero_cache(kind: str, cfg, B: int, S_max: int, enc_len: int = 0):
-    """Decode cache for one block of the given kind."""
+# Block kinds whose serve cache can live in a paged pool (gqa K/V).
+# Recurrent kinds (mlstm/slstm/rglru) carry O(1) state — nothing to
+# page — and MLA latents / enc-dec cross caches stay on the dense path.
+PAGED_KINDS = ("attn", "attn_moe", "attn_local")
+
+
+def supports_paged(cfg) -> bool:
+    """True when every block's serve cache can be paged (the paged
+    serve loop's admission precondition)."""
+    if cfg.attn_kind == "mla" or cfg.n_enc_layers:
+        return False
+    return all(
+        kind in PAGED_KINDS
+        for seg in segments_for(cfg) for kind in seg.pattern
+    )
+
+
+def zero_cache(kind: str, cfg, B: int, S_max: int, enc_len: int = 0,
+               paged=None):
+    """Decode cache for one block of the given kind.
+
+    ``paged`` (a ``kernels.paged.PageSpec``) switches attention kinds
+    to the paged pool layout ``[n_pages, page_size, KV, hd]`` — no
+    per-slot axis; ownership lives in the serve loop's block table."""
     KV, hd = cfg.n_kv, cfg.kv_head_dim
     dt = jnp.bfloat16
+    if paged is not None:
+        if kind not in PAGED_KINDS or cfg.attn_kind == "mla":
+            raise ValueError(
+                f"paged serve cache unsupported for block kind {kind!r} "
+                f"(attn_kind={cfg.attn_kind!r}); see supports_paged()"
+            )
+        z = jnp.zeros((paged.n_pages, paged.page_size, KV, hd), dt)
+        return {"k": z, "v": z}
     if kind in ("attn", "attn_moe"):
         if cfg.attn_kind == "mla":
             return {
@@ -187,15 +217,24 @@ def zero_cache(kind: str, cfg, B: int, S_max: int, enc_len: int = 0):
     raise ValueError(kind)
 
 
-def cache_axes(kind: str, cfg):
+def cache_axes(kind: str, cfg, paged=None):
     """PartitionSpecs for a block cache.
 
     KV heads shard on 'model' when they divide the axis (16); otherwise
     the *sequence* dim of the cache shards (FlashDecoding-style — the
-    decode attention reduction then runs distributed over S shards)."""
+    decode attention reduction then runs distributed over S shards).
+    Paged pools shard the same way: KV heads when they divide, else the
+    page dim (the split-K flash-decode reduction distributes over page
+    shards)."""
     from repro.models.nn import MODEL_AXIS
 
     b = ("pod", "data")
+    if paged is not None:
+        if cfg.n_kv % MODEL_AXIS == 0:
+            s = P(None, None, "model", None)
+        else:
+            s = P("model", None, None, None)   # shard the page dim
+        return {"k": s, "v": s}
     if kind in ("attn", "attn_moe") and cfg.attn_kind == "mla":
         return {"ckv": P(b, "model", None), "kr": P(b, "model", None)}
     if kind in ("attn", "attn_moe", "attn_local", "dec_cross"):
@@ -234,8 +273,14 @@ def apply_block(
     pos=None,
     enc_out=None,
     decode: bool = False,
+    paged_ctx=None,
 ):
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss).
+
+    ``paged_ctx`` routes attention caches through the paged pool:
+    ``{'block_table', 'positions' | 'start', 'impl'}`` — per-slot
+    positions for decode ([B], no shared clock), a scalar chunk start
+    for fixed-shape prefill chunks."""
     aux = jnp.float32(0.0)
     h = nn.rmsnorm_apply(params["norm1"], x)
 
@@ -243,7 +288,25 @@ def apply_block(
         window = cfg.local_window if kind == "attn_local" else None
         is_mla = cfg.attn_kind == "mla"
         new_cache = cache
-        if decode:
+        if paged_ctx is not None and kind in PAGED_KINDS:
+            pages = (cache["k"], cache["v"])
+            if decode:
+                y, (kc, vc) = attn.gqa_decode_paged(
+                    params["attn"], h, cfg, pages,
+                    paged_ctx["block_table"], paged_ctx["positions"],
+                    window=window, apply_fn=apply_fn,
+                    impl=paged_ctx.get("impl", "auto"),
+                )
+            else:
+                y, (kc, vc) = attn.gqa_prefill_chunk(
+                    params["attn"], h, cfg, pages,
+                    paged_ctx["block_table"], paged_ctx["start"],
+                    window=window, apply_fn=apply_fn,
+                )
+            new_cache = dict(cache, k=kc, v=vc)
+            # fall through to the shared residual + FFN/MoE tail
+            # (dec_cross can never be paged, per supports_paged)
+        elif decode:
             if is_mla:
                 y, (ckv, kr) = attn.mla_decode(
                     params["attn"], h, cfg, (cache["ckv"], cache["kr"]), pos,
@@ -483,7 +546,7 @@ def _segment_scan(seg: Segment, params_stacked, x, cfg, apply_fn, remat: bool):
 
 def _segment_scan_cached(
     seg: Segment, params_stacked, caches, x, cfg, apply_fn, pos, enc_out,
-    decode: bool,
+    decode: bool, paged_ctx=None,
 ):
     """Decode/prefill scan over layers, caches updated IN PLACE.
 
@@ -505,7 +568,7 @@ def _segment_scan_cached(
             xx, nc, al = apply_block(
                 kind, layer_params[f"b{bi}"], xx, cfg, apply_fn,
                 cache=layer_cache[f"b{bi}"], pos=pos, enc_out=enc_out,
-                decode=decode,
+                decode=decode, paged_ctx=paged_ctx,
             )
             new_caches[f"b{bi}"] = nc
             aux = aux + al
@@ -524,17 +587,18 @@ def _segment_scan_cached(
     return x, new_caches, aux
 
 
-def init_caches(cfg, B: int, S_max: int, enc_len: int = 0):
-    """Stacked decode caches per segment."""
+def init_caches(cfg, B: int, S_max: int, enc_len: int = 0, paged=None):
+    """Stacked decode caches per segment.  ``paged`` (a PageSpec)
+    switches every attention cache to the paged pool layout."""
     segs = segments_for(cfg)
     caches, axes = [], []
     for seg in segs:
         one = {
-            f"b{bi}": zero_cache(kind, cfg, B, S_max, enc_len)
+            f"b{bi}": zero_cache(kind, cfg, B, S_max, enc_len, paged=paged)
             for bi, kind in enumerate(seg.pattern)
         }
         ax1 = {
-            f"b{bi}": cache_axes(kind, cfg)
+            f"b{bi}": cache_axes(kind, cfg, paged=paged)
             for bi, kind in enumerate(seg.pattern)
         }
         caches.append(
@@ -671,6 +735,77 @@ def decode_step(params, caches, tokens, pos, cfg):
     for seg, sp, ch in zip(segs, params["segments"], caches):
         x, nc, _ = _segment_scan_cached(
             seg, sp, ch, x, cfg, apply_fn, pos=pos, enc_out=None, decode=True
+        )
+        new_caches.append(nc)
+    x = nn.rmsnorm_apply(params["final_norm"], x)
+    head = params.get("head", params["embed"])
+    logits = nn.logits_apply(head, x, vocab=cfg.vocab)
+    return logits[:, 0, : cfg.vocab], new_caches
+
+
+# ---------------------------------------------------------------------------
+# Paged serve path: fixed-shape chunked prefill + paged decode
+# ---------------------------------------------------------------------------
+
+
+def prefill_chunk(params, caches, tokens, start, block_table_row, cfg,
+                  last=0):
+    """One fixed-size prefill chunk: tokens ``[1, C]`` at absolute
+    positions ``[start, start + C)`` of the slot whose pages
+    ``block_table_row [max_blocks]`` names.
+
+    Returns ``(logits [vocab], caches)`` — the logits of chunk row
+    ``last`` (a traced scalar: the prompt's true last token on the
+    final chunk, anything on earlier chunks whose logits nobody reads).
+    Only that one row runs the vocab head projection — the head is the
+    widest matmul here and C-1 rows of it would be discarded.  Every
+    chunk of every prompt lowers through this one trace: together with
+    ``decode_step_paged`` the serve loop's whole compile set is exactly
+    two shapes."""
+    apply_fn = _apply_fn_for("serve")
+    paged_ctx = {
+        "block_table": block_table_row,
+        "start": start,
+        "impl": getattr(cfg, "serve_paged_attn_impl", "auto"),
+    }
+    x = nn.embed_apply(params["embed"], tokens)
+    x = shard_hint(x, P(("pod", "data"), None, None))
+    segs = segments_for(cfg)
+    new_caches = []
+    for seg, sp, ch in zip(segs, params["segments"], caches):
+        x, nc, _ = _segment_scan_cached(
+            seg, sp, ch, x, cfg, apply_fn, pos=None, enc_out=None,
+            decode=False, paged_ctx=paged_ctx,
+        )
+        new_caches.append(nc)
+    x = jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1)
+    x = nn.rmsnorm_apply(params["final_norm"], x)
+    head = params.get("head", params["embed"])
+    logits = nn.logits_apply(head, x, vocab=cfg.vocab)
+    return logits[0, 0, : cfg.vocab], new_caches
+
+
+def decode_step_paged(params, caches, tokens, positions, block_table, cfg):
+    """One paged decode step with per-slot positions (no shared clock).
+
+    tokens ``[B, 1]``; ``positions [B]`` each slot's write position;
+    ``block_table [B, max_blocks]``.  Idle slots carry an all-zero
+    block-table row, so their writes land in the pool's scratch page
+    and their logits are discarded by the loop."""
+    apply_fn = _apply_fn_for("serve")
+    paged_ctx = {
+        "block_table": block_table,
+        "positions": positions,
+        "impl": getattr(cfg, "serve_paged_attn_impl", "auto"),
+    }
+    x = nn.embed_apply(params["embed"], tokens)
+    x = shard_hint(x, P(("pod", "data"), None, None))
+    segs = segments_for(cfg)
+    new_caches = []
+    for seg, sp, ch in zip(segs, params["segments"], caches):
+        x, nc, _ = _segment_scan_cached(
+            seg, sp, ch, x, cfg, apply_fn, pos=None, enc_out=None,
+            decode=True, paged_ctx=paged_ctx,
         )
         new_caches.append(nc)
     x = nn.rmsnorm_apply(params["final_norm"], x)

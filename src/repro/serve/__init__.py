@@ -1,1 +1,2 @@
 from repro.serve.loop import ServeLoop, Request  # noqa: F401
+from repro.serve.paged import PagedServeLoop, PageManager  # noqa: F401

@@ -1,4 +1,13 @@
-"""Batched serving loop with slot-based continuous batching.
+"""Dense-cache serving loop with slot-based continuous batching.
+
+This is the *reference* loop: dense ``[B, S_max]`` caches, a shared
+decode clock, left-padded prompts.  It is kept as the bit-exact oracle
+the paged path is verified against, and as the fallback for block
+kinds whose state cannot be paged (recurrent / enc-dec families — see
+``lm.supports_paged``).  Production serving for attention families is
+``serve.paged.PagedServeLoop``: paged KV pool + block tables, fixed-
+shape chunked prefill, and a compile set of exactly two forward shapes
+(this loop retraces its refill prefill per distinct padded length).
 
 Static decode batch of B slots; finished sequences free their slot and
 the next queued request is prefilled into it *mid-decode* — the freed
@@ -41,17 +50,10 @@ class Request:
 
 class ServeLoop:
     def __init__(self, params, cfg, batch_slots: int = 4, s_max: int = 128,
-                 eos_id: Optional[int] = None, refill_quantum: int = 4):
+                 eos_id: Optional[int] = None):
         self.params, self.cfg = params, cfg
         self.B, self.S_max = batch_slots, s_max
         self.eos_id = eos_id
-        # Admission happens only when the shared length L = S + step is
-        # a multiple of this quantum (or the prompt fits L exactly).
-        # Every distinct L is a distinct prefill shape => a fresh XLA
-        # trace/compile at request time; quantising L bounds the shape
-        # set to S_max/quantum + |distinct prompt lengths| at the cost
-        # of delaying an admission by at most quantum-1 decode steps.
-        self.refill_quantum = max(1, refill_quantum)
         self.queue = deque()
         self.done: List[Request] = []
         self.refills = 0              # mid-decode slot refills (stats)
@@ -97,13 +99,12 @@ class ServeLoop:
 
     def _try_refill(self, caches, cur_np, L: int, slot_i: int):
         """Admit the queue head into a freed slot if its prompt fits the
-        current shared length L and L is an admission point (quantum
-        multiple or exact prompt fit).  Returns (slots_entry, caches) or
-        (None, caches)."""
+        current shared length L.  Every distinct L is a distinct prefill
+        shape => a fresh XLA trace at request time — the retrace cost
+        the paged loop's fixed-size chunks eliminate.  Returns
+        (slots_entry, caches) or (None, caches)."""
         if not self.queue or len(self.queue[0].prompt) > L or L >= self.S_max:
             return None, caches
-        if L % self.refill_quantum != 0 and L != len(self.queue[0].prompt):
-            return None, caches       # off-quantum: wait a step or two
         req = self.queue.popleft()
         toks = np.zeros((1, L), np.int32)
         toks[0, L - len(req.prompt):] = req.prompt       # left-pad to L

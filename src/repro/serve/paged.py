@@ -1,0 +1,269 @@
+"""Paged continuous-batching serve loop — the production serving path.
+
+Replaces the dense loop's two dominant costs at once:
+
+- **Memory.**  Every attention layer's K/V lives in a paged pool
+  (kernels/paged.py); a request owns a list of pages recorded in a
+  per-slot block-table row.  Admission allocates pages, finish frees
+  them — no multi-GB cache copies, no left-padding, no shared decode
+  clock (each slot advances at its own position).
+- **Compiles.**  Prompts are prefilled in fixed-size chunks appended to
+  the slot's pages, so the whole compile set is exactly TWO forward
+  shapes: one ``[1, chunk]`` prefill chunk and one ``[B, 1]`` decode
+  step — for *any* mix of prompt lengths.  The dense loop's
+  ``refill_quantum`` length-quantisation workaround (and its per-length
+  retraces) is gone; admission happens the moment a slot and pages are
+  free.
+
+Page accounting is worst-case at admission: a request reserves enough
+pages for its padded prefill plus ``max_new_tokens`` growth, so decode
+can never hit a mid-flight out-of-pages condition (on-demand growth +
+preemption is a ROADMAP follow-on).  Physical page 0 is the pool's
+scratch page: idle slots' decode writes land there and freed rows are
+reset to it, so a stale block-table row can never alias live pages.
+
+Supported families: every block kind must keep a paged-able cache
+(``lm.supports_paged`` — gqa attention, dense or MoE FFN).  Recurrent
+and enc-dec families carry O(1)/cross state instead of a KV cache and
+stay on the dense ``ServeLoop``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged import PageSpec, spec_for
+from repro.models import lm
+from repro.serve.loop import Request
+
+
+class PageManager:
+    """Host-side physical-page free list.  Page 0 is never handed out
+    (the pool's scratch page)."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self.free = deque(range(1, n_pages))
+        self.allocs = 0      # pages handed out (stats)
+        self.frees = 0       # pages returned (stats)
+        self.peak = 0        # peak pages in use
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - 1 - len(self.free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self.free):
+            return None
+        pages = [self.free.popleft() for _ in range(n)]
+        self.allocs += n
+        self.peak = max(self.peak, self.in_use)
+        return pages
+
+    def release(self, pages: List[int]) -> None:
+        self.frees += len(pages)
+        self.free.extend(pages)
+
+
+class PagedServeLoop:
+    """Slot-based continuous batching over a paged KV cache.
+
+    Greedy decoding; same ``Request`` protocol as the dense loop."""
+
+    def __init__(self, params, cfg, batch_slots: int = 4, s_max: int = 128,
+                 eos_id: Optional[int] = None, page_size: int = 16,
+                 chunk: int = 16, n_pages: Optional[int] = None,
+                 attn_impl: Optional[str] = None):
+        if not lm.supports_paged(cfg):
+            raise ValueError(
+                f"config {cfg.name!r} has non-pageable block kinds; "
+                "use serve.loop.ServeLoop (dense caches)"
+            )
+        if attn_impl is not None:
+            cfg = dataclasses.replace(cfg, serve_paged_attn_impl=attn_impl)
+        self.params, self.cfg = params, cfg
+        self.B, self.S_max = batch_slots, s_max
+        self.eos_id = eos_id
+        self.chunk = chunk
+        self.spec: PageSpec = spec_for(s_max, batch_slots,
+                                       page_size=page_size, n_pages=n_pages)
+        # the padded tail of a last chunk writes up to ceil(L/C)*C - 1;
+        # every such position must fall inside the slot's allocatable
+        # blocks, else the block-table lookup would clamp the garbage
+        # writes onto the slot's last LIVE page (silent corruption)
+        padded_max = -(-s_max // chunk) * chunk
+        if padded_max > self.spec.s_alloc:
+            raise ValueError(
+                f"chunk={chunk} pads prompts up to {padded_max} tokens, "
+                f"past the block-table range {self.spec.s_alloc} "
+                f"(= ceil(s_max/page_size)*page_size); pick chunk/page_size "
+                "so padded prefills stay within allocatable pages"
+            )
+        self.pages = PageManager(self.spec.n_pages)
+        self.caches, _ = lm.init_caches(cfg, batch_slots, s_max,
+                                        paged=self.spec)
+        self.queue = deque()
+        self.done: List[Request] = []
+        self.refills = 0              # mid-decode slot admissions (stats)
+
+        # host-side scheduler state (numpy; shipped to device per step)
+        self.block_table = np.zeros((batch_slots, self.spec.max_blocks),
+                                    np.int32)
+        self.lens = np.zeros(batch_slots, np.int32)
+        self.slots: List[Optional[dict]] = [None] * batch_slots
+
+        # the ONLY two jitted forward shapes the loop ever compiles
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        self._prefill_chunk = jax.jit(
+            lambda p, c, t, start, bt_row, last: lm.prefill_chunk(
+                p, c, t, start, bt_row, cfg, last=last),
+            donate_argnums=donate,
+        )
+        self._decode = jax.jit(
+            lambda p, c, t, pos, bt: lm.decode_step_paged(
+                p, c, t, pos, bt, cfg),
+            donate_argnums=donate,
+        )
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, req: Request):
+        if not 0 < len(req.prompt) <= self.S_max:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} outside (0, "
+                f"s_max={self.S_max}]"
+            )
+        self.queue.append(req)
+
+    def _pages_needed(self, req: Request) -> int:
+        """Worst-case pages for the padded prefill + decode growth."""
+        C, P = self.chunk, self.spec.page_size
+        n_chunks = -(-len(req.prompt) // C)
+        # decode writes positions [L, L + max_new - 1); final length is
+        # capped at S_max (the loop finishes a slot at capacity).  The
+        # clamp is s_alloc, not S_max: the padded prefill tail may spill
+        # past S_max within the last allocatable block (the __init__
+        # guard bounds it by s_alloc), and those writes need their page.
+        hi = min(max(n_chunks * C, len(req.prompt) + req.max_new_tokens - 1),
+                 self.spec.s_alloc)
+        return -(-hi // P)
+
+    def _admit(self, slot_i: int) -> str:
+        """Prefill the queue head into a free slot.  Returns
+        'admitted' (live slot installed), 'finished' (the request
+        completed on its first token — the slot is free again), or
+        'blocked' (empty queue / pool exhausted: FIFO head waits)."""
+        if not self.queue:
+            return "blocked"
+        need = self._pages_needed(self.queue[0])
+        page_ids = self.pages.alloc(need)
+        if page_ids is None:
+            return "blocked"              # pool exhausted: request waits
+        req = self.queue.popleft()
+        C = self.chunk
+        L = len(req.prompt)
+        row = np.zeros(self.spec.max_blocks, np.int32)
+        row[:need] = page_ids
+        self.block_table[slot_i] = row
+        bt_row = jnp.asarray(row)
+        n_chunks = -(-L // C)
+        logits = None
+        for ci in range(n_chunks):
+            buf = np.zeros(C, np.int32)
+            seg = req.prompt[ci * C:(ci + 1) * C]
+            buf[: len(seg)] = seg
+            last = (L - 1) - ci * C if ci == n_chunks - 1 else 0
+            logits, self.caches = self._prefill_chunk(
+                self.params, self.caches, jnp.asarray(buf[None]),
+                jnp.int32(ci * C), bt_row, jnp.int32(last),
+            )
+        tok0 = int(np.asarray(jnp.argmax(logits)))
+        self.lens[slot_i] = L
+        entry = {"req": req, "out": [tok0], "pages": page_ids, "cur": tok0}
+        # L == S_max leaves no room to write a decode token: emit the
+        # prefill argmax only, exactly like the dense oracle's capacity
+        # guard (decoding anyway would clamp the KV write onto the
+        # slot's last live page — silent corruption, not an error)
+        if self._done_now(entry) or L >= self.S_max:
+            self._finish(slot_i, entry)
+            return "finished"
+        self.slots[slot_i] = entry
+        return "admitted"
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _done_now(self, entry) -> bool:
+        return (
+            (self.eos_id is not None and entry["out"][-1] == self.eos_id)
+            or len(entry["out"]) >= entry["req"].max_new_tokens
+        )
+
+    def _finish(self, slot_i: int, entry) -> None:
+        entry["req"].output = np.asarray(entry["out"], np.int32)
+        self.done.append(entry["req"])
+        self.pages.release(entry["pages"])
+        self.block_table[slot_i] = 0      # scratch page: no stale aliasing
+        self.lens[slot_i] = 0
+        self.slots[slot_i] = None
+
+    def _fill_free_slots(self, mid_decode: bool) -> None:
+        """Admit queued requests into every free slot.  A request that
+        finishes on its first generated token frees the slot again, so
+        the inner loop keeps admitting (no deadlock, no lost work)."""
+        for i in range(self.B):
+            while self.slots[i] is None:
+                status = self._admit(i)
+                if status == "blocked":
+                    break
+                if mid_decode:
+                    self.refills += 1     # 'admitted' or 'finished'
+                if status == "admitted":
+                    break
+
+    def run(self):
+        """Process the queue; greedy decoding.  Returns finished
+        requests (same contract as the dense loop)."""
+        while self.queue or any(s is not None for s in self.slots):
+            self._fill_free_slots(mid_decode=False)
+            if self.queue and all(s is None for s in self.slots):
+                # every slot is free yet the head still can't get pages:
+                # the pool is simply too small for this request
+                raise RuntimeError(
+                    f"request {self.queue[0].rid} needs "
+                    f"{self._pages_needed(self.queue[0])} pages; pool has "
+                    f"{self.spec.n_pages - 1}"
+                )
+            self._decode_drain()
+        return self.done
+
+    def _decode_drain(self) -> None:
+        while any(s is not None for s in self.slots):
+            live = [i for i in range(self.B) if self.slots[i] is not None]
+            cur = np.zeros((self.B, 1), np.int32)
+            for i in live:
+                cur[i, 0] = self.slots[i]["cur"]
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(cur),
+                jnp.asarray(self.lens), jnp.asarray(self.block_table),
+            )
+            nxt = np.asarray(jnp.argmax(logits, -1))
+            freed = False
+            for i in live:
+                entry = self.slots[i]
+                self.lens[i] += 1
+                tok = int(nxt[i])
+                entry["out"].append(tok)
+                entry["cur"] = tok
+                if self._done_now(entry) or self.lens[i] >= self.S_max:
+                    self._finish(i, entry)
+                    freed = True
+            if freed:
+                # continuous batching: freed slots admit immediately —
+                # other slots keep decoding, nobody waits for a drain
+                self._fill_free_slots(mid_decode=True)

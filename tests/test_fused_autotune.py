@@ -160,7 +160,10 @@ def test_autotune_rejects_non_bitexact(monkeypatch, tmp_path):
         cfg = autotune.tune(a, t, e, c, B_a=2, G=3, N=64, reps=2,
                             cands=[{"impl": "xla-flat"}, {"impl": "ref"}])
         assert calls.get("sabotaged")
-        assert cfg["impl"] == "ref"
+        # the sabotaged fast candidate must never win; either the
+        # honest candidate or the always-timed xla baseline may
+        # (which of the two is faster is machine noise)
+        assert cfg["impl"] in ("ref", "xla")
     finally:
         autotune.reset_cache()
 
@@ -210,11 +213,7 @@ def test_serve_loop_refills_freed_slots_mid_decode():
     cfg = smoke_config("codeqwen1.5-7b")
     params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
     rng = np.random.default_rng(0)
-    # quantum=1: admit at every step (maximally eager) to pin the
-    # refill mechanics; the default quantum only batches admission
-    # points to bound prefill recompiles
-    loop = ServeLoop(params, cfg, batch_slots=2, s_max=48,
-                     refill_quantum=1)
+    loop = ServeLoop(params, cfg, batch_slots=2, s_max=48)
     max_new = [2, 8, 2, 3, 2]
     for i, mn in enumerate(max_new):
         loop.submit(Request(
@@ -408,10 +407,11 @@ def test_auto_allow_binds_freshly_tuned_winner(tmp_path, monkeypatch):
         autotune.reset_cache()
 
 
-def test_serve_refill_quantum_bounds_prefill_shapes():
-    """Admissions only happen at quantum-multiple lengths (or exact
-    prompt fit), bounding the distinct prefill shapes XLA must compile
-    at request time."""
+def test_serve_dense_loop_admits_whenever_prompt_fits():
+    """The dense loop's refill_quantum workaround is gone (bounding the
+    compile set is the paged loop's job — tests/test_paged_serve.py
+    asserts its two-shape property): admission now happens the moment
+    the queue head fits the shared length."""
     from repro.configs import smoke_config
     from repro.models import lm as lm_mod
     from repro.serve.loop import Request, ServeLoop
@@ -419,30 +419,16 @@ def test_serve_refill_quantum_bounds_prefill_shapes():
     cfg = smoke_config("codeqwen1.5-7b")
     params, _ = lm_mod.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
     rng = np.random.default_rng(7)
-    loop = ServeLoop(params, cfg, batch_slots=2, s_max=48,
-                     refill_quantum=4)
-    seen_lengths = []
-    real_prefill = lm_mod.prefill
-
-    def spy(params_, batch, cfg_, S_max=None):
-        seen_lengths.append(batch["tokens"].shape)
-        return real_prefill(params_, batch, cfg_, S_max=S_max)
-
-    lm_mod.prefill = spy
-    try:
-        for i, mn in enumerate([2, 10, 2, 2, 2]):
-            loop.submit(Request(
-                rid=i,
-                prompt=rng.integers(0, cfg.vocab, size=5).astype(np.int32),
-                max_new_tokens=mn,
-            ))
-        done = loop.run()
-    finally:
-        lm_mod.prefill = real_prefill
+    loop = ServeLoop(params, cfg, batch_slots=2, s_max=48)
+    for i, mn in enumerate([2, 10, 2, 2, 2]):
+        loop.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, size=5).astype(np.int32),
+            max_new_tokens=mn,
+        ))
+    done = loop.run()
     assert len(done) == 5
     assert all(len(r.output) in (2, 10) for r in done)
-    # every refill prefill length is a quantum multiple or an exact
-    # prompt fit (5); batch prefills are (B, 5)
-    for shape in seen_lengths:
-        if shape[0] == 1:             # refill admission
-            assert shape[1] % 4 == 0 or shape[1] == 5, shape
+    # slot freed at step 2 admits immediately (no quantum wait): rids
+    # 2..4 all ride the freed slot while rid 1 is still decoding
+    assert loop.refills >= 3

@@ -1,0 +1,379 @@
+"""Paged KV cache + flash decode + chunked prefill + paged serve loop
+(this PR's tentpole surface).
+
+The paged path's contract is *bit-exactness against the dense-cache
+oracle*: the lax paged attention reproduces the dense decode math to
+the bit (masked keys contribute exact zeros), so greedy outputs through
+the paged loop must be IDENTICAL to the dense loop run solo — across
+admission chunking, mid-decode refills, and page reuse."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.kernels import autotune, ops, paged
+from repro.kernels.flash_decode import flash_decode
+from repro.models import lm
+from repro.serve.loop import Request, ServeLoop
+from repro.serve.paged import PagedServeLoop
+
+
+# ---------------------------------------------------------------------------
+# attention impls: flash paths vs the lax oracle
+# ---------------------------------------------------------------------------
+
+
+def _attn_setup(seed, B=3, KV=2, rep=4, hd=16, P=8, MB=8):
+    rng = np.random.default_rng(seed)
+    n_pages = B * MB + 1
+    kp = jnp.asarray(rng.normal(size=(n_pages, P, KV, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, P, KV, hd)), jnp.float32)
+    bt = jnp.asarray(np.stack(
+        [1 + b * MB + np.arange(MB) for b in range(B)]).astype(np.int32))
+    q = jnp.asarray(rng.normal(size=(B, 1, KV * rep, hd)), jnp.float32)
+    return q, kp, vp, bt
+
+
+@pytest.mark.parametrize("window", [None, 16])
+def test_flash_paths_match_lax_oracle(window):
+    """flash-lax (dynamic-trip online softmax) and the Pallas split-K
+    kernel must match the gather+softmax oracle at uneven per-slot
+    lengths (including a slot mid-page and a slot at capacity)."""
+    q, kp, vp, bt = _attn_setup(0)
+    B, _, H, hd = q.shape
+    KV = kp.shape[2]
+    positions = jnp.asarray(np.array([5, 37, 63], np.int32))
+    ref = paged.dispatch_attention({"impl": "lax"}, q, kp, vp, bt,
+                                   positions, window=window)
+    fl = paged.dispatch_attention({"impl": "flash-lax"}, q, kp, vp, bt,
+                                  positions, window=window)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(fl),
+                               rtol=2e-5, atol=2e-5)
+    for n_splits in (1, 3, 4):
+        out = flash_decode(
+            q.reshape(B, KV, H // KV, hd), kp, vp, bt, positions + 1,
+            window=window, n_splits=n_splits, interpret=True,
+        ).reshape(B, 1, -1)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   rtol=2e-5, atol=2e-5, err_msg=str(n_splits))
+
+
+def test_paged_writes_isolated_between_slots():
+    """Decode writes land in the owning slot's page; an idle slot's
+    write lands in the scratch page (0), never in live pages."""
+    q, kp, vp, bt = _attn_setup(1)
+    B, P, KV, hd = 3, kp.shape[1], kp.shape[2], kp.shape[3]
+    # slot 2 idle: zero block-table row
+    bt = bt.at[2].set(0)
+    positions = jnp.asarray(np.array([9, 17, 4], np.int32))
+    k_new = jnp.ones((B, 1, KV, hd))
+    kp2, vp2 = paged.write_decode(kp, vp, k_new, k_new, bt, positions)
+    # slot 0: page bt[0, 9//P] offset 9%P
+    pid0 = int(bt[0, 9 // P])
+    assert np.array_equal(np.asarray(kp2[pid0, 9 % P]), np.ones((KV, hd)))
+    pid1 = int(bt[1, 17 // P])
+    assert np.array_equal(np.asarray(kp2[pid1, 17 % P]), np.ones((KV, hd)))
+    # scratch page took the idle slot's write; all other pages of other
+    # slots are untouched
+    assert np.array_equal(np.asarray(kp2[0, 4 % P]), np.ones((KV, hd)))
+    untouched = np.asarray(kp2).copy()
+    untouched[pid0, 9 % P] = np.asarray(kp[pid0, 9 % P])
+    untouched[pid1, 17 % P] = np.asarray(kp[pid1, 17 % P])
+    untouched[0, 4 % P] = np.asarray(kp[0, 4 % P])
+    assert np.array_equal(untouched, np.asarray(kp))
+
+
+# ---------------------------------------------------------------------------
+# model level: chunked prefill + paged decode vs the dense oracle
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_and_paged_decode_bitexact_vs_dense():
+    """Fixed-shape chunk prefill (padded tail included) + per-slot paged
+    decode produce bit-identical logits to the dense prefill/decode."""
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    rng = np.random.default_rng(0)
+    L, C, P, S_max = 11, 8, 8, 32
+    prompt = rng.integers(0, cfg.vocab, size=L).astype(np.int32)
+
+    lg_d, caches_d = lm.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                                cfg, S_max=S_max)
+
+    spec = paged.spec_for(S_max, 1, page_size=P)
+    caches_p, _ = lm.init_caches(cfg, 1, S_max, paged=spec)
+    n_chunks = -(-L // C)
+    need = -(-(n_chunks * C) // P)
+    row = np.zeros(spec.max_blocks, np.int32)
+    row[:need] = 1 + np.arange(need)
+    bt_row = jnp.asarray(row)
+    lg_p = None
+    for ci in range(n_chunks):
+        buf = np.zeros(C, np.int32)
+        seg = prompt[ci * C:(ci + 1) * C]
+        buf[: len(seg)] = seg
+        last = (L - 1) - ci * C if ci == n_chunks - 1 else 0
+        lg_p, caches_p = lm.prefill_chunk(
+            params, caches_p, jnp.asarray(buf[None]), jnp.int32(ci * C),
+            bt_row, cfg, last=jnp.int32(last),
+        )
+    assert jnp.array_equal(lg_d[0], lg_p), "prefill logits diverged"
+
+    bt = bt_row[None]
+    cur = jnp.argmax(lg_d, -1)[:, None].astype(jnp.int32)
+    for step in range(4):
+        lgd, caches_d = lm.decode_step(params, caches_d, cur,
+                                       jnp.int32(L + step), cfg)
+        lgp, caches_p = lm.decode_step_paged(
+            params, caches_p, cur, jnp.asarray([L + step], np.int32), bt, cfg)
+        assert jnp.array_equal(lgd, lgp), f"decode step {step} diverged"
+        cur = jnp.argmax(lgd, -1)[:, None].astype(jnp.int32)
+
+
+def test_supports_paged_gates_families():
+    assert lm.supports_paged(smoke_config("codeqwen1.5-7b"))
+    assert lm.supports_paged(smoke_config("kimi-k2-1t-a32b")) is False  # mla
+    assert lm.supports_paged(smoke_config("xlstm-350m")) is False
+    assert lm.supports_paged(smoke_config("recurrentgemma-2b")) is False
+    cfg = smoke_config("xlstm-350m")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    with pytest.raises(ValueError, match="non-pageable"):
+        PagedServeLoop(params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# serve loop: refill under the paged cache
+# ---------------------------------------------------------------------------
+
+
+def _workload(cfg, rng, lengths, max_new):
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+                    max_new_tokens=mn)
+            for i, (n, mn) in enumerate(zip(lengths, max_new))]
+
+
+def test_paged_refill_bitexact_vs_dense_oracle_across_boundary():
+    """Mid-decode admissions (freed slot -> next request, pages
+    realloc'd) must produce outputs IDENTICAL to each request run solo
+    through the dense-cache loop — page reuse across the refill
+    boundary is invisible to the math."""
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    rng = np.random.default_rng(0)
+    lengths, max_new = [6, 11, 3, 9, 5], [2, 8, 3, 2, 4]
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=48,
+                          page_size=8, chunk=8)
+    for r in _workload(cfg, rng, lengths, max_new):
+        loop.submit(r)
+    done = {r.rid: r for r in loop.run()}
+    assert len(done) == 5
+    assert loop.refills >= 3          # rids 2,3,4 admitted mid-decode
+    rng2 = np.random.default_rng(0)
+    for i, r in enumerate(_workload(cfg, rng2, lengths, max_new)):
+        solo = ServeLoop(params, cfg, batch_slots=1, s_max=48)
+        solo.submit(r)
+        want = solo.run()[0].output
+        assert len(done[i].output) == max_new[i]
+        assert np.array_equal(done[i].output, want), (i, done[i].output, want)
+
+
+def test_paged_pages_freed_and_reused():
+    """Finish releases every page; later admissions re-allocate the
+    same physical pages (the pool, not fresh memory, is the resource)."""
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    rng = np.random.default_rng(1)
+    # pool deliberately small: only one request's pages + scratch, so
+    # every admission MUST reuse the previous request's pages
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=32,
+                          page_size=8, chunk=8, n_pages=5)
+    for r in _workload(cfg, rng, [9, 9, 9], [3, 3, 3]):
+        loop.submit(r)
+    done = loop.run()
+    assert len(done) == 3
+    assert loop.pages.in_use == 0                  # all freed
+    assert loop.pages.frees == loop.pages.allocs
+    assert loop.pages.peak <= 4                    # never past the pool
+    assert loop.pages.allocs >= 6                  # pages were recycled
+
+
+def test_paged_loop_compiles_exactly_two_shapes():
+    """Arbitrary prompt-length mix => exactly one prefill-chunk trace
+    and one decode trace (the acceptance criterion; the dense loop
+    retraces per distinct padded length)."""
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    rng = np.random.default_rng(2)
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=64,
+                          page_size=8, chunk=8)
+    lengths = [5, 9, 14, 7, 11, 6, 13]
+    for r in _workload(cfg, rng, lengths, [3] * len(lengths)):
+        loop.submit(r)
+    done = loop.run()
+    assert len(done) == len(lengths)
+    assert loop._prefill_chunk._cache_size() == 1
+    assert loop._decode._cache_size() == 1
+
+
+def test_paged_loop_capacity_clamp_and_oversized_prompt():
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    rng = np.random.default_rng(3)
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=16,
+                          page_size=8, chunk=8)
+    with pytest.raises(ValueError, match="outside"):
+        loop.submit(Request(rid=0, prompt=np.zeros(17, np.int32)))
+    with pytest.raises(ValueError, match="outside"):
+        loop.submit(Request(rid=0, prompt=np.zeros(0, np.int32)))
+    # generation is clamped at capacity: emit what fits, free the slot
+    loop.submit(Request(rid=1,
+                        prompt=rng.integers(0, cfg.vocab, 12).astype(np.int32),
+                        max_new_tokens=50))
+    done = loop.run()
+    assert len(done) == 1
+    assert 1 <= len(done[0].output) <= 16 - 12 + 1
+
+
+def test_paged_prompt_at_exact_capacity_matches_dense_oracle():
+    """A prompt of exactly s_max tokens leaves no room for a decode
+    write: the loop must emit the prefill argmax only — decoding anyway
+    would clamp the KV write onto the slot's last live page.  The dense
+    oracle's capacity guard produces exactly one token too."""
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=16,
+                          page_size=8, chunk=8)
+    loop.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+    done = loop.run()
+    assert len(done) == 1 and len(done[0].output) == 1
+    solo = ServeLoop(params, cfg, batch_slots=1, s_max=16)
+    solo.submit(Request(rid=9, prompt=prompt, max_new_tokens=5))
+    want = solo.run()[0].output
+    assert np.array_equal(done[0].output, want)
+
+
+def test_paged_loop_rejects_chunk_padding_past_block_table():
+    """chunk/page_size combinations whose padded prefill tail would
+    spill past the block-table range must be rejected at construction
+    (the lookup would otherwise clamp garbage writes onto live pages)."""
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    with pytest.raises(ValueError, match="padded"):
+        PagedServeLoop(params, cfg, batch_slots=1, s_max=40,
+                       page_size=8, chunk=32)
+
+
+# ---------------------------------------------------------------------------
+# autotune: attention joins the shape-keyed tuner; satellite guards
+# ---------------------------------------------------------------------------
+
+
+def test_tune_attention_records_and_auto_dispatches(tmp_path, monkeypatch):
+    cache = tmp_path / "at.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(cache))
+    autotune.reset_cache()
+    try:
+        q, kp, vp, bt = _attn_setup(4)
+        positions = jnp.asarray(np.array([5, 20, 40], np.int32))
+        cfg = autotune.tune_attention(q, kp, vp, bt, positions, reps=2)
+        assert cfg["impl"] in {"lax", "flash-lax"}
+        key = autotune.attn_shape_key(3, 2, 4, 16, bt.shape[1],
+                                      kp.shape[1], None)
+        data = json.loads(cache.read_text())
+        assert data[key]["config"] == cfg
+        # impl='auto' honors the persisted winner; under jit on a MISS
+        # it must lower the lax oracle (trace-safe fallback)
+        out = paged.paged_attention(q, kp, vp, bt, positions, impl="auto")
+        ref = paged.dispatch_attention({"impl": "lax"}, q, kp, vp, bt,
+                                       positions)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+        autotune.reset_cache()
+        monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path / "empty.json"))
+        jit_out = jax.jit(
+            lambda *a: paged.paged_attention(*a, impl="auto")
+        )(q, kp, vp, bt, positions)
+        assert jnp.array_equal(jit_out, ref)   # miss -> lax, bit-identical
+    finally:
+        autotune.reset_cache()
+
+
+def test_tune_never_commits_winner_slower_than_xla_baseline(
+        tmp_path, monkeypatch):
+    """The satellite contract: even when every *given* candidate is
+    slower than the default, tune() re-times the baseline alongside and
+    commits it — impl='auto' can never dispatch slower than 'xla'."""
+    import time as _time_mod
+
+    monkeypatch.setenv(autotune.CACHE_ENV, str(tmp_path / "at.json"))
+    autotune.reset_cache()
+    try:
+        rng = np.random.default_rng(5)
+        from repro.core.tlmac import compile as tc
+
+        w = rng.integers(-4, 4, size=(24, 64))
+        plan = tc.compile_layer(w, B_w=3, B_a=2, G=3, d_p=64,
+                                anneal_iters=40, seed=0)
+        a = jnp.asarray(rng.integers(0, 4, size=(5, 24)))
+        t = jnp.asarray(plan.table)
+        e = jnp.asarray(plan.exec_idx)
+        c = jnp.asarray(plan.step_cluster)
+
+        real = ops.dispatch_config
+
+        def slow_ref(config, *args, **kw):
+            out = real(config, *args, **kw)
+            if config["impl"] == "ref":
+                out.block_until_ready()
+                _time_mod.sleep(0.02)      # make 'ref' measurably slow
+            return out
+
+        monkeypatch.setattr(ops, "dispatch_config", slow_ref)
+        cfg = autotune.tune(a, t, e, c, B_a=2, G=3, N=64, reps=2,
+                            cands=[{"impl": "ref"}])
+        assert cfg == {"impl": "xla"}, cfg
+        entry = json.loads((tmp_path / "at.json").read_text())
+        (rec,) = entry.values()
+        assert rec["config"] == {"impl": "xla"}
+        assert rec["baseline_us"]["xla"] > 0
+    finally:
+        autotune.reset_cache()
+
+
+def test_pallas_onehot_gated_out_of_default_candidates(monkeypatch):
+    """pallas-onehot must not join the default sweep (it measures ~2
+    orders of magnitude slower), but stays reachable explicitly."""
+    cands = autotune.candidates(8, 256, 256, B_a=3, G=4,
+                                include_pallas=True)
+    impls = {json.dumps(c, sort_keys=True) for c in cands}
+    assert not any("onehot" in s for s in impls)
+    assert any(c["impl"] == "pallas" for c in cands)
+    monkeypatch.setenv("REPRO_TLMAC_TUNE_ONEHOT", "1")
+    cands2 = autotune.candidates(8, 256, 256, B_a=3, G=4,
+                                 include_pallas=True)
+    assert any(c["impl"] == "pallas-onehot" for c in cands2)
+    assert any(c.get("gather") == "onehot" for c in cands2
+               if c["impl"] == "fused")
+    # explicit dispatch still works and stays bit-exact
+    rng = np.random.default_rng(6)
+    from repro.core.tlmac import compile as tc
+
+    w = rng.integers(-2, 2, size=(12, 64))
+    plan = tc.compile_layer(w, B_w=2, B_a=2, G=2, d_p=64,
+                            anneal_iters=40, seed=0)
+    a = jnp.asarray(rng.integers(0, 4, size=(3, 12)))
+    out = ops.tlmac_matmul(
+        a, jnp.asarray(plan.table), jnp.asarray(plan.exec_idx),
+        jnp.asarray(plan.step_cluster), B_a=2, G=2, N=64,
+        impl="pallas-onehot",
+    )
+    ref = ops.dense_int_matmul(a, jnp.asarray(w))
+    assert np.array_equal(np.asarray(out), np.asarray(ref))
