@@ -1,11 +1,15 @@
 """Batched serving with the TLMAC lookup path vs dense/int8 baselines.
 
     PYTHONPATH=src python examples/serve_decode.py --arch xlstm-350m
+    PYTHONPATH=src python examples/serve_decode.py --shared-prefix
 
 Runs the slot-based serving loop (prefill + greedy decode) with each
 serve impl and reports tokens/s (CPU wall time is illustrative; the
 HBM-bytes comparison that matters at scale is in
-``python -m benchmarks.run --only tlmac_memory``).
+``python -m benchmarks.run --only tlmac_memory``).  Paged-capable
+(gqa) archs go through ``PagedServeLoop`` with the radix-tree prefix
+cache on by default; ``--shared-prefix`` submits requests that share a
+long system prompt and prints the cache's hit/saved/CoW stats.
 """
 
 import argparse
@@ -25,6 +29,18 @@ from repro.serve.loop import Request, ServeLoop
 from repro.serve.paged import PagedServeLoop
 
 
+def _prompts(cfg, rng, args):
+    if not args.shared_prefix:
+        return [rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+                for _ in range(args.requests)]
+    system = rng.integers(0, cfg.vocab, size=24).astype(np.int32)
+    return [system] + [
+        np.concatenate([system,
+                        rng.integers(0, cfg.vocab, size=6).astype(np.int32)])
+        for _ in range(args.requests - 1)
+    ]
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="xlstm-350m")
@@ -33,7 +49,15 @@ def main():
     ap.add_argument("--dense-loop", action="store_true",
                     help="force the dense-cache oracle loop even for "
                          "paged-capable (gqa) archs")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the radix-tree prefix cache on the "
+                         "paged loop")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="requests share a long system prompt "
+                         "(prefix-cache showcase; needs a gqa arch)")
     args = ap.parse_args()
+    if args.shared_prefix and args.arch == "xlstm-350m":
+        args.arch = "codeqwen1.5-7b"      # needs a paged-capable family
 
     for impl in ("dense", "int8", "tlmac"):
         cfg = dataclasses.replace(smoke_config(args.arch), serve_impl=impl)
@@ -41,16 +65,14 @@ def main():
         paged = lm.supports_paged(cfg) and not args.dense_loop
         if paged:
             loop = PagedServeLoop(params, cfg, batch_slots=3, s_max=64,
-                                  page_size=8, chunk=8)
+                                  page_size=8, chunk=8,
+                                  prefix_cache=not args.no_prefix_cache)
         else:
             loop = ServeLoop(params, cfg, batch_slots=3, s_max=64)
         rng = np.random.default_rng(0)
-        for i in range(args.requests):
-            loop.submit(Request(
-                rid=i,
-                prompt=rng.integers(0, cfg.vocab, size=8).astype(np.int32),
-                max_new_tokens=args.max_new,
-            ))
+        for i, prompt in enumerate(_prompts(cfg, rng, args)):
+            loop.submit(Request(rid=i, prompt=prompt,
+                                max_new_tokens=args.max_new))
         t0 = time.perf_counter()
         done = loop.run()
         dt = time.perf_counter() - t0
@@ -58,6 +80,12 @@ def main():
         kind = "paged" if paged else "dense-loop"
         print(f"[{impl:5s}/{kind}] {len(done)} reqs, {toks} tokens in "
               f"{dt:.2f}s ({toks/dt:.1f} tok/s)")
+        if paged and loop.prefix is not None and args.shared_prefix:
+            s = loop.prefix.stats()
+            print(f"        prefix cache: hit_rate={s['hit_rate']:.2f} "
+                  f"nodes={s['nodes']} evicted={s['evicted']} "
+                  f"prefill_saved={loop.prefill_tokens_saved}tok "
+                  f"cow={loop.cow_copies}")
 
 
 if __name__ == "__main__":

@@ -87,6 +87,16 @@ class ArchConfig:
                                  # (kernels/paged.py): auto (shape-keyed
                                  # autotune; lax on a cache miss), lax,
                                  # flash-lax, or flash (Pallas split-K)
+    serve_prefix_cache: bool = True  # radix-tree prefix cache over the
+                                 # paged KV pool (serve/prefix_cache.py):
+                                 # finished prompts' pages are kept,
+                                 # keyed by token content, and mapped
+                                 # read-only into later slots sharing
+                                 # the prefix (CoW on write)
+    serve_prefix_cache_pages: int = 0  # max pages the radix tree may
+                                 # retain (0 = unbounded: bounded only
+                                 # by pool pressure, which evicts LRU
+                                 # unreferenced prefixes on demand)
     serve_shared_act_quant: bool = True  # swiglu wi/wg share one
                                  # activation quantise+pack (wi's
                                  # a_step); disable for checkpoints

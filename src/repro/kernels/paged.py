@@ -122,9 +122,30 @@ def write_chunk(k_pages, v_pages, k, v, block_table_row, start):
     return kp, vp
 
 
+def copy_page(k_pages, v_pages, src, dst):
+    """Copy-on-write: duplicate physical page ``src`` into ``dst`` in
+    one layer's K/V pool (``[n_pages, P, KV, hd]``).
+
+    The prefix cache (serve/prefix_cache.py) shares pages between the
+    radix tree and any number of slots; a write that would land on a
+    shared page first duplicates it with this copy and swaps the
+    block-table entry, so a cached page's content is immutable while
+    referenced.  ``src``/``dst`` are traced scalars — one compile
+    covers every CoW.  Stacked-layer caches go through
+    ``models/lm.cache_copy_page``, which maps this over the tree."""
+    return (k_pages.at[dst].set(k_pages[src]),
+            v_pages.at[dst].set(v_pages[src]))
+
+
 def gather_kv(k_pages, v_pages, block_table):
     """Materialise per-slot K/V ``[B, s_alloc, KV, hd]`` through the
-    block table (the lax paths; the flash paths never call this)."""
+    block table (the lax paths; the flash paths never call this).
+
+    Read-only with respect to the pool: every attention read path
+    (this gather, the flash kernels' per-page loads) only loads pages,
+    so block-table rows may freely alias shared prefix-cache pages —
+    the write paths (``write_decode``/``write_chunk``) are the only
+    ones that need the copy-on-write guard."""
     B, MB = block_table.shape
     _, P, KV, hd = k_pages.shape
     kc = k_pages[block_table].reshape(B, MB * P, KV, hd)

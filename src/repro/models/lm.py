@@ -748,11 +748,32 @@ def decode_step(params, caches, tokens, pos, cfg):
 # ---------------------------------------------------------------------------
 
 
+def cache_copy_page(caches, src, dst):
+    """Copy-on-write for the paged serve path: duplicate physical page
+    ``src`` into ``dst`` across EVERY layer's K/V pool (leaves are
+    stacked ``[n_layers, n_pages, P, KV, hd]``; see
+    ``kernels/paged.copy_page`` for the single-pool form).
+
+    The serve loop calls this before any write that would land on a
+    page shared with the prefix cache or another slot; ``src``/``dst``
+    are traced scalars, so one compile covers every CoW the loop ever
+    performs (it is a page-sized memcpy, not a forward shape)."""
+    return jax.tree.map(lambda c: c.at[:, dst].set(c[:, src]), caches)
+
+
 def prefill_chunk(params, caches, tokens, start, block_table_row, cfg,
                   last=0):
     """One fixed-size prefill chunk: tokens ``[1, C]`` at absolute
     positions ``[start, start + C)`` of the slot whose pages
     ``block_table_row [max_blocks]`` names.
+
+    ``start`` may sit mid-context: with a prefix-cache hit the serve
+    loop maps the cached pages into the block-table row and prefills
+    only the suffix, so the first chunk starts at the cached offset —
+    its queries attend through the block table to the cached K/V
+    exactly as they would to freshly-written pages (the gather is
+    position-indexed, not chunk-indexed), keeping suffix prefill
+    bit-exact with a full prefill.
 
     Returns ``(logits [vocab], caches)`` — the logits of chunk row
     ``last`` (a traced scalar: the prompt's true last token on the

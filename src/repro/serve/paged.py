@@ -14,13 +14,24 @@ Replaces the dense loop's two dominant costs at once:
   ``refill_quantum`` length-quantisation workaround (and its per-length
   retraces) is gone; admission happens the moment a slot and pages are
   free.
+- **Recompute.**  A radix-tree prefix cache (serve/prefix_cache.py)
+  keys finished prompts' pages by token content.  Admission maps the
+  longest cached page-aligned prefix read-only into the slot's block
+  table and prefills only the suffix — shared-system-prompt traffic
+  pays O(suffix) prefill, not O(prompt).  Pages are ref-counted;
+  writes that would land on a shared page copy-on-write first (fresh
+  page + device page copy + block-table swap), so a cached page's
+  content is immutable for as long as anything references it.
 
-Page accounting is worst-case at admission: a request reserves enough
-pages for its padded prefill plus ``max_new_tokens`` growth, so decode
-can never hit a mid-flight out-of-pages condition (on-demand growth +
-preemption is a ROADMAP follow-on).  Physical page 0 is the pool's
-scratch page: idle slots' decode writes land there and freed rows are
-reset to it, so a stale block-table row can never alias live pages.
+Page accounting at admission reserves pages for the *non-cached*
+blocks only (plus CoW copies of cached blocks the suffix prefill must
+write), then worst-case for ``max_new_tokens`` growth, so decode can
+never hit a mid-flight out-of-pages condition (on-demand growth +
+preemption is a ROADMAP follow-on).  Under pool pressure, admission
+evicts LRU unreferenced cached prefixes before giving up.  Physical
+page 0 is the pool's scratch page: permanently pinned, idle slots'
+decode writes land there and freed rows are reset to it, so a stale
+block-table row can never alias live pages.
 
 Supported families: every block kind must keep a paged-able cache
 (``lm.supports_paged`` — gqa attention, dense or MoE FFN).  Recurrent
@@ -41,45 +52,101 @@ import numpy as np
 from repro.kernels.paged import PageSpec, spec_for
 from repro.models import lm
 from repro.serve.loop import Request
+from repro.serve.prefix_cache import PrefixCache
 
 
 class PageManager:
-    """Host-side physical-page free list.  Page 0 is never handed out
-    (the pool's scratch page)."""
+    """Host-side ref-counted physical-page pool.
+
+    Page 0 is the pool's scratch page: permanently pinned (refcount 1
+    at construction, released by nobody), never handed out.  Every
+    other page is either on the free list (refcount 0) or referenced
+    (refcount >= 1: one per owning slot/tree entry, +1 per additional
+    sharer).  ``release`` returns a page to the free list only at
+    refcount 0; double-frees and frees of the scratch page raise."""
 
     def __init__(self, n_pages: int):
         self.n_pages = n_pages
         self.free = deque(range(1, n_pages))
+        self.refcnt = np.zeros(n_pages, np.int64)
+        self.refcnt[0] = 1   # scratch page: pinned for the pool's lifetime
         self.allocs = 0      # pages handed out (stats)
-        self.frees = 0       # pages returned (stats)
+        self.frees = 0       # pages returned to the free list (stats)
         self.peak = 0        # peak pages in use
 
     @property
     def in_use(self) -> int:
         return self.n_pages - 1 - len(self.free)
 
+    @property
+    def available(self) -> int:
+        return len(self.free)
+
     def alloc(self, n: int) -> Optional[List[int]]:
         if n > len(self.free):
             return None
         pages = [self.free.popleft() for _ in range(n)]
+        for p in pages:
+            if self.refcnt[p] != 0:
+                raise AssertionError(
+                    f"free list corrupt: page {p} has refcount "
+                    f"{self.refcnt[p]}"
+                )
+            self.refcnt[p] = 1
         self.allocs += n
         self.peak = max(self.peak, self.in_use)
         return pages
 
+    def retain(self, pages: List[int]) -> None:
+        """One more reference per page (sharing an already-live page)."""
+        for p in pages:
+            if self.refcnt[p] <= 0:
+                raise ValueError(f"retain of free page {p}")
+            self.refcnt[p] += 1
+
     def release(self, pages: List[int]) -> None:
-        self.frees += len(pages)
-        self.free.extend(pages)
+        """Drop one reference per page; a page rejoins the free list
+        only when its last reference goes."""
+        for p in pages:
+            p = int(p)
+            if p == 0:
+                raise ValueError("release of scratch page 0")
+            if self.refcnt[p] <= 0:
+                raise ValueError(f"double free of page {p}")
+            self.refcnt[p] -= 1
+            if self.refcnt[p] == 0:
+                self.free.append(p)
+                self.frees += 1
+
+    def check(self) -> None:
+        """Free-list/refcount invariant: pages 1..n-1 partition exactly
+        into {free, refcount 0} and {off-list, refcount >= 1}; the
+        scratch page is pinned and never listed."""
+        free = list(self.free)
+        assert len(set(free)) == len(free), "duplicate page on free list"
+        assert 0 not in free, "scratch page on free list"
+        assert self.refcnt[0] >= 1, "scratch page unpinned"
+        fs = set(free)
+        for p in range(1, self.n_pages):
+            if p in fs:
+                assert self.refcnt[p] == 0, \
+                    f"page {p} free with refcount {self.refcnt[p]}"
+            else:
+                assert self.refcnt[p] >= 1, \
+                    f"page {p} leaked (off-list, refcount 0)"
 
 
 class PagedServeLoop:
     """Slot-based continuous batching over a paged KV cache.
 
-    Greedy decoding; same ``Request`` protocol as the dense loop."""
+    Greedy decoding; same ``Request`` protocol as the dense loop.
+    ``prefix_cache=None`` follows ``cfg.serve_prefix_cache``."""
 
     def __init__(self, params, cfg, batch_slots: int = 4, s_max: int = 128,
                  eos_id: Optional[int] = None, page_size: int = 16,
                  chunk: int = 16, n_pages: Optional[int] = None,
-                 attn_impl: Optional[str] = None):
+                 attn_impl: Optional[str] = None,
+                 prefix_cache: Optional[bool] = None):
         if not lm.supports_paged(cfg):
             raise ValueError(
                 f"config {cfg.name!r} has non-pageable block kinds; "
@@ -106,11 +173,21 @@ class PagedServeLoop:
                 "so padded prefills stay within allocatable pages"
             )
         self.pages = PageManager(self.spec.n_pages)
+        if prefix_cache is None:
+            prefix_cache = getattr(cfg, "serve_prefix_cache", True)
+        self.prefix: Optional[PrefixCache] = (
+            PrefixCache(page_size, self.pages,
+                        max_pages=getattr(cfg, "serve_prefix_cache_pages", 0))
+            if prefix_cache else None
+        )
         self.caches, _ = lm.init_caches(cfg, batch_slots, s_max,
                                         paged=self.spec)
         self.queue = deque()
         self.done: List[Request] = []
         self.refills = 0              # mid-decode slot admissions (stats)
+        self.prefill_tokens_run = 0   # chunk tokens actually prefilled
+        self.prefill_tokens_saved = 0  # chunk tokens skipped via the cache
+        self.cow_copies = 0           # copy-on-write page duplications
 
         # host-side scheduler state (numpy; shipped to device per step)
         self.block_table = np.zeros((batch_slots, self.spec.max_blocks),
@@ -119,6 +196,8 @@ class PagedServeLoop:
         self.slots: List[Optional[dict]] = [None] * batch_slots
 
         # the ONLY two jitted forward shapes the loop ever compiles
+        # (the CoW page copy below is a cache-to-cache device memcpy,
+        # not a forward pass; it adds exactly one more trace of its own)
         donate = () if jax.default_backend() == "cpu" else (1,)
         self._prefill_chunk = jax.jit(
             lambda p, c, t, start, bt_row, last: lm.prefill_chunk(
@@ -130,6 +209,12 @@ class PagedServeLoop:
                 p, c, t, pos, bt, cfg),
             donate_argnums=donate,
         )
+        cow_donate = () if jax.default_backend() == "cpu" else (0,)
+        # a fresh lambda per loop keeps the jit cache (and its
+        # _cache_size trace count) per-instance, like the two above
+        self._copy_page = jax.jit(
+            lambda c, src, dst: lm.cache_copy_page(c, src, dst),
+            donate_argnums=cow_donate)
 
     # -- admission ----------------------------------------------------------
 
@@ -141,8 +226,9 @@ class PagedServeLoop:
             )
         self.queue.append(req)
 
-    def _pages_needed(self, req: Request) -> int:
-        """Worst-case pages for the padded prefill + decode growth."""
+    def _total_blocks(self, req: Request) -> int:
+        """Block-table entries the request will ever touch: the padded
+        prefill plus decode growth."""
         C, P = self.chunk, self.spec.page_size
         n_chunks = -(-len(req.prompt) // C)
         # decode writes positions [L, L + max_new - 1); final length is
@@ -154,6 +240,67 @@ class PagedServeLoop:
                  self.spec.s_alloc)
         return -(-hi // P)
 
+    def _plan(self, req: Request, n_cached: int):
+        """Admission plan given ``n_cached`` matched prefix blocks.
+
+        The first position that must still run the forward pass is
+        ``p0 = min(n_cached * P, L - 1)`` — the prompt's last token
+        always reruns (its logits seed decoding), so a fully-cached
+        prompt still prefills its final chunk.  Chunks start on C
+        boundaries, so the first live chunk is ``ci0 = p0 // C``; any
+        *cached* block overlapping the written range ``[ci0*C, ...)``
+        must be copy-on-write duplicated (the recompute rewrites part
+        of it, and positions below ``ci0*C`` inside it are served by
+        the copy).  Returns (total_blocks, ci0, n_keep, n_cow, need):
+        ``n_keep`` cached blocks stay mapped read-only, ``n_cow`` are
+        duplicated, ``need`` fresh pages cover both CoW copies and all
+        non-cached blocks."""
+        C, P = self.chunk, self.spec.page_size
+        L = len(req.prompt)
+        total = self._total_blocks(req)
+        n_cached = min(n_cached, total)
+        p0 = min(n_cached * P, L - 1)
+        ci0 = p0 // C
+        w0_blk = (ci0 * C) // P
+        n_keep = min(n_cached, w0_blk)
+        n_cow = n_cached - n_keep
+        need = (total - n_cached) + n_cow
+        return total, ci0, n_keep, n_cow, need
+
+    def _pages_needed(self, req: Request, n_cached: int = 0) -> int:
+        """Fresh pages admission must allocate.  With a prefix-cache
+        match, already-cached prompt blocks are mapped, not reserved —
+        only non-cached blocks plus CoW copies cost pool pages."""
+        return self._plan(req, n_cached)[4]
+
+    def _match_blocks(self, req: Request) -> int:
+        """Cached full-page prefix length (blocks) for the queue head,
+        without taking references or stats (planning/error paths)."""
+        if self.prefix is None:
+            return 0
+        return len(self.prefix.match(req.prompt, record=False))
+
+    def _alloc_with_evict(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` pages, evicting LRU unreferenced cached
+        prefixes under pool pressure (locked/mapped pages are refcount
+        >= 2 and can never be victims).  Eviction only runs when it can
+        actually cover the shortfall — a blocked request retried every
+        refill round must not strip the tree without admitting."""
+        pages = self.pages.alloc(n)
+        if pages is None and self.prefix is not None:
+            short = n - self.pages.available
+            if self.prefix.evictable() >= short:
+                self.prefix.evict(short)
+                pages = self.pages.alloc(n)
+        return pages
+
+    def _cow(self, src: int, dst: int) -> None:
+        """Copy-on-write: duplicate physical page ``src`` into the
+        freshly-allocated ``dst`` across every layer's K/V pool."""
+        self.caches = self._copy_page(self.caches, jnp.int32(src),
+                                      jnp.int32(dst))
+        self.cow_copies += 1
+
     def _admit(self, slot_i: int) -> str:
         """Prefill the queue head into a free slot.  Returns
         'admitted' (live slot installed), 'finished' (the request
@@ -161,20 +308,64 @@ class PagedServeLoop:
         'blocked' (empty queue / pool exhausted: FIFO head waits)."""
         if not self.queue:
             return "blocked"
-        need = self._pages_needed(self.queue[0])
-        page_ids = self.pages.alloc(need)
+        req = self.queue[0]
+        # record=False: a blocked head re-matches every refill round;
+        # stats are recorded once per ADMITTED request below
+        hits = self.prefix.match(req.prompt, record=False) \
+            if self.prefix is not None else []
+        total, ci0, n_keep, n_cow, need = self._plan(req, len(hits))
+        hits = hits[: n_keep + n_cow]
+        if hits:
+            # hold the matched pages so pressure-eviction (possibly our
+            # own, below) can never reclaim them out from under us
+            self.prefix.lock(hits)
+        page_ids = self._alloc_with_evict(need)
+        if page_ids is None and hits:
+            # the locked hits themselves can pin the pool (their pages
+            # are ineligible for eviction while we hold them): fall
+            # back to a cache-less admission — drop the locks, evict,
+            # and recompute the whole prompt.  Restores the dense-pool
+            # liveness guarantee: a request that fits worst-case always
+            # admits once every slot is free.
+            self.pages.release([n.page_id for n in hits])
+            hits = []
+            total, ci0, n_keep, n_cow, need = self._plan(req, 0)
+            page_ids = self._alloc_with_evict(need)
         if page_ids is None:
             return "blocked"              # pool exhausted: request waits
-        req = self.queue.popleft()
-        C = self.chunk
+        self.queue.popleft()
+        C, P = self.chunk, self.spec.page_size
         L = len(req.prompt)
+        if self.prefix is not None:
+            # one lookup record per admitted request (post-fallback:
+            # if the cache-less path ran, the cache contributed nothing)
+            self.prefix.record_lookup(len(hits), L // P - len(hits))
+
+        blocks = np.zeros(total, np.int32)
+        shared = np.zeros(total, bool)
+        for b, node in enumerate(hits):
+            blocks[b] = node.page_id
+            shared[b] = True
+        blocks[len(hits):] = page_ids[: total - len(hits)]
+        # CoW the cached blocks the suffix prefill will write: the copy
+        # carries the positions below the first live chunk that the
+        # recompute does not cover, and protects the tree's page (and
+        # its other readers) from this slot's writes
+        cow_pool = page_ids[total - len(hits):]
+        for j, b in enumerate(range(n_keep, n_keep + n_cow)):
+            src, dst = int(blocks[b]), int(cow_pool[j])
+            self._cow(src, dst)
+            self.pages.release([src])     # drop the map reference
+            blocks[b] = dst
+            shared[b] = False
+
         row = np.zeros(self.spec.max_blocks, np.int32)
-        row[:need] = page_ids
+        row[:total] = blocks
         self.block_table[slot_i] = row
         bt_row = jnp.asarray(row)
         n_chunks = -(-L // C)
         logits = None
-        for ci in range(n_chunks):
+        for ci in range(ci0, n_chunks):
             buf = np.zeros(C, np.int32)
             seg = req.prompt[ci * C:(ci + 1) * C]
             buf[: len(seg)] = seg
@@ -183,9 +374,12 @@ class PagedServeLoop:
                 self.params, self.caches, jnp.asarray(buf[None]),
                 jnp.int32(ci * C), bt_row, jnp.int32(last),
             )
+        self.prefill_tokens_run += (n_chunks - ci0) * C
+        self.prefill_tokens_saved += ci0 * C
         tok0 = int(np.asarray(jnp.argmax(logits)))
         self.lens[slot_i] = L
-        entry = {"req": req, "out": [tok0], "pages": page_ids, "cur": tok0}
+        entry = {"req": req, "out": [tok0], "cur": tok0,
+                 "blocks": blocks, "shared": shared}
         # L == S_max leaves no room to write a decode token: emit the
         # prefill argmax only, exactly like the dense oracle's capacity
         # guard (decoding anyway would clamp the KV write onto the
@@ -207,7 +401,18 @@ class PagedServeLoop:
     def _finish(self, slot_i: int, entry) -> None:
         entry["req"].output = np.asarray(entry["out"], np.int32)
         self.done.append(entry["req"])
-        self.pages.release(entry["pages"])
+        blocks = entry["blocks"]
+        n_prompt = len(entry["req"].prompt) // self.spec.page_size
+        if self.prefix is not None and n_prompt:
+            # the slot's full prompt pages transfer into the radix tree
+            # instead of being freed (insert dedupes against existing
+            # nodes and releases duplicates/map references itself)
+            self.prefix.insert(entry["req"].prompt, blocks[:n_prompt])
+            rest = blocks[n_prompt:]
+        else:
+            rest = blocks
+        if len(rest):
+            self.pages.release(list(rest))
         self.block_table[slot_i] = 0      # scratch page: no stale aliasing
         self.lens[slot_i] = 0
         self.slots[slot_i] = None
@@ -232,21 +437,48 @@ class PagedServeLoop:
         while self.queue or any(s is not None for s in self.slots):
             self._fill_free_slots(mid_decode=False)
             if self.queue and all(s is None for s in self.slots):
-                # every slot is free yet the head still can't get pages:
-                # the pool is simply too small for this request
+                # every slot is free and eviction has been tried, yet
+                # the head still can't get pages: the pool is simply
+                # too small for this request
+                req = self.queue[0]
                 raise RuntimeError(
-                    f"request {self.queue[0].rid} needs "
-                    f"{self._pages_needed(self.queue[0])} pages; pool has "
-                    f"{self.spec.n_pages - 1}"
+                    f"request {req.rid} needs "
+                    f"{self._pages_needed(req, self._match_blocks(req))} "
+                    f"fresh pages; pool has {self.spec.n_pages - 1}"
                 )
             self._decode_drain()
         return self.done
 
+    def _ensure_writable(self, slot_i: int, entry, blk: int) -> None:
+        """Copy-on-write guard before a decode write to block ``blk``.
+        Prompt-prefix sharing alone never routes a decode write onto a
+        shared page (decode writes land at positions >= L, cached
+        blocks end at <= L), but the guard keeps the invariant — no
+        write ever lands on a page with other readers — local and
+        future-proof (e.g. sharing generated pages)."""
+        if blk >= len(entry["shared"]) or not entry["shared"][blk]:
+            return
+        pages = self._alloc_with_evict(1)
+        if pages is None:
+            raise RuntimeError(
+                "pool exhausted during copy-on-write; admission should "
+                "have reserved this page"
+            )
+        src, dst = int(entry["blocks"][blk]), pages[0]
+        self._cow(src, dst)
+        self.pages.release([src])
+        entry["blocks"][blk] = dst
+        entry["shared"][blk] = False
+        self.block_table[slot_i, blk] = dst
+
     def _decode_drain(self) -> None:
+        P = self.spec.page_size
         while any(s is not None for s in self.slots):
             live = [i for i in range(self.B) if self.slots[i] is not None]
             cur = np.zeros((self.B, 1), np.int32)
             for i in live:
+                self._ensure_writable(i, self.slots[i],
+                                      int(self.lens[i]) // P)
                 cur[i, 0] = self.slots[i]["cur"]
             logits, self.caches = self._decode(
                 self.params, self.caches, jnp.asarray(cur),

@@ -1,0 +1,239 @@
+"""Radix-tree prefix cache: content-addressed sharing of paged KV.
+
+TLMAC's core trade is reuse-over-recompute: parameter redundancy lets
+one clustered table serve every layer that shares it.  The serving-side
+analogue is **KV redundancy** — shared-system-prompt traffic recomputes
+and re-stores identical KV pages per request.  This module keys those
+pages by their *token content* so identical prefixes map to the same
+physical pages.
+
+Structure
+---------
+A radix tree over page-sized token groups.  Each node owns exactly ONE
+physical page of the paged KV pool (kernels/paged.py) and is keyed by
+the ``page_size`` tokens that page covers; the path from the root to a
+node spells the full token history ``[0, depth * page_size)``.  Because
+K/V at position ``p`` is a deterministic function of the tokens at
+``[0, p]`` (causal attention, absolute rotary), matching a node means
+the cached page is bit-identical to what a fresh prefill would write —
+the serve loop can map it read-only into a new slot's block table and
+skip the prefill compute for those positions entirely.
+
+Ownership / lifetime
+--------------------
+Pages are ref-counted by the pool's ``PageManager``:
+
+- the tree holds ONE reference per node (acquired at ``insert``, where
+  a finished slot's prompt pages transfer in, or are deduplicated
+  against an existing node and released);
+- every slot currently mapping a cached page holds one more
+  (``lock`` at admission, released at finish);
+- eviction (``evict``) only ever removes LRU *leaf* nodes whose page
+  refcount is exactly 1 (the tree's own) — a page some slot still
+  reads can never be reclaimed, and inner nodes only become evictable
+  after their whole subtree is gone (an inner node's page is a prefix
+  of its children's histories, so leaf-first order is also
+  correctness order for re-matching).
+
+The tree never touches device memory itself: nodes store page *ids*;
+the serve loop owns the block tables and the copy-on-write path
+(``models/lm.cache_copy_page``) for pages it must write.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+
+class RadixNode:
+    """One cached page: ``key`` = the page's tokens, path = history."""
+
+    __slots__ = ("key", "page_id", "parent", "children", "tick")
+
+    def __init__(self, key: Tuple[int, ...], page_id: int,
+                 parent: Optional["RadixNode"]):
+        self.key = key
+        self.page_id = page_id
+        self.parent = parent
+        self.children: dict = {}
+        self.tick = 0
+
+
+class PrefixCache:
+    """Token-keyed radix tree over a ref-counted page pool.
+
+    ``max_pages`` (0 = unbounded) caps how many pages the tree may
+    retain; past it, LRU leaves are evicted after each insert.  Under
+    pool pressure the serve loop additionally calls ``evict`` directly.
+    """
+
+    def __init__(self, page_size: int, pages, max_pages: int = 0):
+        self.P = page_size
+        self.pages = pages                    # serve.paged.PageManager
+        self.max_pages = max_pages
+        self.root = RadixNode((), -1, None)   # sentinel: owns no page
+        self.n_nodes = 0
+        self._tick = 0
+        # stats (the bench's prefix-hit-rate numbers)
+        self.hit_blocks = 0       # matched pages across all lookups
+        self.miss_blocks = 0      # full prompt pages that missed
+        self.inserted = 0         # nodes created
+        self.deduped = 0          # insert found the page already cached
+        self.evicted = 0          # nodes evicted
+
+    # -- lookup -------------------------------------------------------------
+
+    def _touch(self, node: RadixNode) -> None:
+        self._tick += 1
+        node.tick = self._tick
+
+    def _page_key(self, prompt: Sequence[int], i: int) -> Tuple[int, ...]:
+        return tuple(int(t) for t in prompt[i * self.P:(i + 1) * self.P])
+
+    def match(self, prompt: Sequence[int],
+              record: bool = True) -> List[RadixNode]:
+        """Longest cached page-aligned prefix of ``prompt``: the node
+        path, root-excluded (``[n]`` maps block ``n`` of the slot).
+        Touches matched nodes (MRU) but takes no references — call
+        ``lock`` before anything else can trigger eviction.
+
+        ``record=False`` skips the hit/miss stats: admission retries of
+        a blocked request re-match every round, and counting those
+        would inflate the hit rate the bench reports — the serve loop
+        records exactly once per admitted request via
+        ``record_lookup``."""
+        out: List[RadixNode] = []
+        node = self.root
+        for i in range(len(prompt) // self.P):
+            child = node.children.get(self._page_key(prompt, i))
+            if child is None:
+                break
+            out.append(child)
+            node = child
+        if record:
+            self.record_lookup(len(out), len(prompt) // self.P - len(out))
+        for n in out:
+            self._touch(n)
+        return out
+
+    def record_lookup(self, hits: int, misses: int) -> None:
+        self.hit_blocks += hits
+        self.miss_blocks += misses
+
+    def lock(self, nodes: List[RadixNode]) -> None:
+        """Take one page reference per matched node for a slot that is
+        about to map them (released by the loop at slot finish)."""
+        self.pages.retain([n.page_id for n in nodes])
+
+    # -- insert / merge -----------------------------------------------------
+
+    def insert(self, prompt: Sequence[int], page_ids: Sequence[int]) -> None:
+        """Insert/merge the first ``len(page_ids)`` full pages of
+        ``prompt``.  Ownership of each page reference in ``page_ids``
+        transfers to the tree: a missing node keeps the page (the
+        slot's reference becomes the tree's); an existing node keeps
+        ITS page and the offered one is released (for a page the slot
+        mapped from this very node, that drops the slot's map
+        reference; for a recomputed/CoW duplicate it frees the copy)."""
+        node = self.root
+        for i, pid in enumerate(page_ids):
+            key = self._page_key(prompt, i)
+            child = node.children.get(key)
+            if child is None:
+                child = RadixNode(key, int(pid), node)
+                node.children[key] = child
+                self.n_nodes += 1
+                self.inserted += 1
+            else:
+                self.pages.release([int(pid)])
+                self.deduped += 1
+            self._touch(child)
+            node = child
+        if self.max_pages and self.n_nodes > self.max_pages:
+            self.evict(self.n_nodes - self.max_pages)
+
+    # -- eviction -----------------------------------------------------------
+
+    def _evictable_leaves(self) -> List[RadixNode]:
+        out, stack = [], [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not self.root and not n.children \
+                    and self.pages.refcnt[n.page_id] == 1:
+                out.append(n)
+        return out
+
+    def evictable(self) -> int:
+        """Pages reclaimable by ``evict`` right now: nodes whose whole
+        subtree is unreferenced (refcount 1 throughout — leaf-first
+        cascade can reach them).  The serve loop checks this before
+        evicting so a shortfall eviction can't cover never strips the
+        tree for nothing."""
+        def walk(node: RadixNode):
+            size, child_rec = 1, 0
+            fully = self.pages.refcnt[node.page_id] == 1
+            for c in node.children.values():
+                cs, cr, cf = walk(c)
+                size += cs
+                child_rec += cr
+                fully = fully and cf
+            return size, (size if fully else child_rec), fully
+
+        return sum(walk(c)[1] for c in self.root.children.values())
+
+    def evict(self, n: int) -> int:
+        """Free up to ``n`` pages by evicting LRU unreferenced leaves
+        (cascading: a parent stripped of its last child becomes a leaf
+        and joins the pool next round).  Returns pages freed.  O(nodes)
+        per round — the tree is host metadata, never the hot path."""
+        freed = 0
+        while freed < n:
+            leaves = self._evictable_leaves()
+            if not leaves:
+                break
+            take = sorted(leaves, key=lambda nd: nd.tick)[: n - freed]
+            for victim in take:
+                del victim.parent.children[victim.key]
+                self.pages.release([victim.page_id])
+                self.n_nodes -= 1
+                self.evicted += 1
+                freed += 1
+        return freed
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hit_blocks + self.miss_blocks
+        return self.hit_blocks / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "nodes": self.n_nodes,
+            "hit_blocks": self.hit_blocks,
+            "miss_blocks": self.miss_blocks,
+            "hit_rate": self.hit_rate,
+            "inserted": self.inserted,
+            "deduped": self.deduped,
+            "evicted": self.evicted,
+        }
+
+    def check(self) -> None:
+        """Structural invariants (tests): every node's page is live in
+        the pool (refcount >= 1), no page id appears twice, node count
+        matches the tree, and no node owns the scratch page."""
+        seen = set()
+        stack = list(self.root.children.values())
+        count = 0
+        while stack:
+            n = stack.pop()
+            count += 1
+            assert n.page_id != 0, "tree owns the scratch page"
+            assert n.page_id not in seen, "duplicate page in tree"
+            seen.add(n.page_id)
+            assert self.pages.refcnt[n.page_id] >= 1, \
+                f"tree page {n.page_id} has no reference"
+            assert n.parent.children.get(n.key) is n, "broken parent link"
+            stack.extend(n.children.values())
+        assert count == self.n_nodes, (count, self.n_nodes)

@@ -185,14 +185,17 @@ def test_paged_refill_bitexact_vs_dense_oracle_across_boundary():
 
 def test_paged_pages_freed_and_reused():
     """Finish releases every page; later admissions re-allocate the
-    same physical pages (the pool, not fresh memory, is the resource)."""
+    same physical pages (the pool, not fresh memory, is the resource).
+    Prefix cache off: this test's contract is the raw free list —
+    tree retention/eviction has its own suite (test_prefix_cache)."""
     cfg = smoke_config("codeqwen1.5-7b")
     params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
     rng = np.random.default_rng(1)
     # pool deliberately small: only one request's pages + scratch, so
     # every admission MUST reuse the previous request's pages
     loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=32,
-                          page_size=8, chunk=8, n_pages=5)
+                          page_size=8, chunk=8, n_pages=5,
+                          prefix_cache=False)
     for r in _workload(cfg, rng, [9, 9, 9], [3, 3, 3]):
         loop.submit(r)
     done = loop.run()

@@ -1,0 +1,421 @@
+"""Prefix-cache subsystem: ref-counted PageManager, token-keyed radix
+tree, copy-on-write paged KV sharing (this PR's tentpole surface).
+
+The contract is the paged loop's usual one, extended across sharing:
+greedy outputs with the prefix cache enabled must be BIT-IDENTICAL to
+the dense ``ServeLoop`` oracle — across two requests sharing a prefix,
+CoW divergence mid-decode, eviction under pool pressure, and
+re-admission after eviction — while the compile set stays at exactly
+two forward shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback sweep
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import smoke_config
+from repro.kernels import paged
+from repro.models import lm
+from repro.serve.loop import Request, ServeLoop
+from repro.serve.paged import PagedServeLoop, PageManager
+from repro.serve.prefix_cache import PrefixCache
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    return cfg, params
+
+
+def _oracle(params, cfg, prompt, max_new, s_max=48):
+    solo = ServeLoop(params, cfg, batch_slots=1, s_max=s_max)
+    solo.submit(Request(rid=0, prompt=prompt, max_new_tokens=max_new))
+    return solo.run()[0].output
+
+
+# ---------------------------------------------------------------------------
+# PageManager hardening (satellite: refcount invariants, no double-free)
+# ---------------------------------------------------------------------------
+
+
+def test_page_manager_refcount_lifecycle():
+    pm = PageManager(6)
+    pages = pm.alloc(3)
+    assert sorted(pages) == [1, 2, 3] and pm.in_use == 3
+    pm.retain(pages[:2])
+    assert list(pm.refcnt[1:4]) == [2, 2, 1]
+    pm.release(pages)                       # drops to [1, 1, 0]
+    assert pm.in_use == 2 and pm.frees == 1
+    pm.release(pages[:2])                   # last refs: all free again
+    assert pm.in_use == 0 and pm.frees == 3
+    pm.check()
+
+
+def test_page_manager_guards():
+    pm = PageManager(4)
+    with pytest.raises(ValueError, match="scratch page 0"):
+        pm.release([0])
+    with pytest.raises(ValueError, match="double free"):
+        pm.release([2])                     # never allocated
+    pages = pm.alloc(1)
+    pm.release(pages)
+    with pytest.raises(ValueError, match="double free"):
+        pm.release(pages)
+    with pytest.raises(ValueError, match="retain of free"):
+        pm.retain(pages)
+    assert pm.alloc(99) is None             # over-ask: no partial grab
+    assert pm.available == 3
+    pm.check()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_page_manager_property_random_ops(seed):
+    """Random alloc/retain/release/insert/evict sequences never corrupt
+    the free list or the tree: a shadow refcount map stays equal to the
+    manager's, and both structural checks pass at every step."""
+    rng = np.random.default_rng(seed)
+    P = 4
+    pm = PageManager(12)
+    tree = PrefixCache(P, pm)
+    shadow = {}                                  # page -> refcount
+    held = []                                    # (page, kind) refs we own
+    for _ in range(120):
+        op = rng.integers(0, 5)
+        if op == 0:                              # alloc
+            n = int(rng.integers(1, 4))
+            pages = pm.alloc(n)
+            if pages is not None:
+                for p in pages:
+                    assert shadow.get(p, 0) == 0
+                    shadow[p] = 1
+                    held.append(p)
+        elif op == 1 and held:                   # retain
+            p = held[int(rng.integers(len(held)))]
+            pm.retain([p])
+            shadow[p] += 1
+            held.append(p)
+        elif op == 2 and held:                   # release
+            i = int(rng.integers(len(held)))
+            p = held.pop(i)
+            pm.release([p])
+            shadow[p] -= 1
+        elif op == 3:                            # insert a random prompt
+            n_pages = int(rng.integers(1, 3))
+            pages = pm.alloc(n_pages)
+            if pages is not None:
+                prompt = rng.integers(0, 3, size=n_pages * P)
+                tree.insert(prompt, pages)
+                # ownership moved to the tree (dedupe may have released
+                # a duplicate): mirror the resulting refcounts
+                for p in pages:
+                    shadow[p] = pm.refcnt[p]
+        else:                                    # evict under pressure
+            tree.evict(int(rng.integers(1, 4)))
+            for p in list(shadow):
+                shadow[p] = pm.refcnt[p]
+        pm.check()
+        tree.check()
+        for p, rc in shadow.items():
+            assert pm.refcnt[p] == rc, (p, rc, pm.refcnt[p])
+    # drain: release everything we hold, evict the whole tree
+    for p in held:
+        pm.release([p])
+    tree.evict(10**6)
+    pm.check()
+    assert pm.in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# radix tree semantics
+# ---------------------------------------------------------------------------
+
+
+def test_radix_match_insert_dedupe():
+    pm = PageManager(10)
+    tree = PrefixCache(4, pm)
+    prompt = np.arange(8, dtype=np.int32)        # 2 full pages
+    pages = pm.alloc(2)
+    tree.insert(prompt, pages)
+    assert tree.n_nodes == 2 and tree.inserted == 2
+    hit = tree.match(prompt)
+    assert [n.page_id for n in hit] == pages
+    # a prompt diverging in page 2 matches only page 1
+    other = prompt.copy()
+    other[5] += 1
+    assert len(tree.match(other)) == 1
+    # duplicate insert releases the offered pages, keeps the tree's
+    dup = pm.alloc(2)
+    tree.insert(prompt, dup)
+    assert tree.deduped == 2 and tree.n_nodes == 2
+    assert pm.refcnt[dup[0]] == 0 and pm.refcnt[dup[1]] == 0
+    pm.check()
+    tree.check()
+
+
+def test_radix_lru_eviction_respects_refs_and_leaves():
+    pm = PageManager(10)
+    tree = PrefixCache(2, pm)
+    a = np.array([1, 1, 2, 2], np.int32)         # pages (1,1) -> (2,2)
+    b = np.array([1, 1, 3, 3], np.int32)         # shares page (1,1)
+    tree.insert(a, pm.alloc(2))
+    tree.insert(b, pm.alloc(2))
+    assert tree.n_nodes == 3                     # shared first page
+    tree.match(a)                                # A's leaf is now MRU
+    tree.evict(1)
+    assert len(tree.match(b)) == 1               # B's leaf (LRU) evicted
+    assert len(tree.match(a)) == 2               # A path intact
+    # locked pages are never victims; the inner node survives while
+    # its child holds it as parent
+    hit = tree.match(a)
+    tree.lock(hit)
+    assert tree.evict(10) == 0                   # everything referenced
+    pm.release([n.page_id for n in hit])
+    assert tree.evict(10) == 2                   # leaf first, then root
+    assert tree.n_nodes == 0 and pm.in_use == 0
+    pm.check()
+
+
+def test_radix_evictable_excludes_referenced_subtrees():
+    """``evictable`` counts only pages a cascade can actually reach:
+    locking a path excludes it (and eviction of a shortfall it cannot
+    cover must not run — the serve loop checks this first)."""
+    pm = PageManager(10)
+    tree = PrefixCache(2, pm)
+    a = np.array([1, 1, 2, 2], np.int32)
+    b = np.array([1, 1, 3, 3], np.int32)
+    tree.insert(a, pm.alloc(2))
+    tree.insert(b, pm.alloc(2))
+    assert tree.evictable() == 3
+    hit = tree.match(a)
+    tree.lock(hit)
+    assert tree.evictable() == 1                 # only B's unlocked leaf
+    pm.release([n.page_id for n in hit])
+    assert tree.evictable() == 3
+    pm.check()
+    tree.check()
+
+
+def test_radix_max_pages_cap_evicts_lru():
+    """``serve_prefix_cache_pages`` bounds the tree: inserts past the
+    cap evict LRU leaves down to it."""
+    pm = PageManager(10)
+    tree = PrefixCache(2, pm, max_pages=2)
+    tree.insert(np.array([1, 1, 2, 2, 3, 3], np.int32), pm.alloc(3))
+    assert tree.n_nodes == 2 and tree.evicted == 1
+    assert pm.in_use == 2                        # evicted page freed
+    # the kept nodes are the prefix (inner nodes can't evict first)
+    assert len(tree.match(np.array([1, 1, 2, 2], np.int32))) == 2
+    tree.check()
+    pm.check()
+
+
+def test_kernel_copy_page_unit():
+    rng = np.random.default_rng(0)
+    kp = jnp.asarray(rng.normal(size=(4, 2, 2, 3)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(4, 2, 2, 3)), jnp.float32)
+    k2, v2 = paged.copy_page(kp, vp, jnp.int32(1), jnp.int32(3))
+    assert np.array_equal(np.asarray(k2[3]), np.asarray(kp[1]))
+    assert np.array_equal(np.asarray(v2[3]), np.asarray(vp[1]))
+    assert np.array_equal(np.asarray(k2[:3]), np.asarray(kp[:3]))
+
+
+# ---------------------------------------------------------------------------
+# serve loop: sharing, CoW, eviction, re-admission — vs the dense oracle
+# ---------------------------------------------------------------------------
+
+
+def test_shared_prefix_bitexact_and_saves_prefill(served):
+    """Two requests sharing a page-aligned prefix map the cached pages
+    read-only (refcount sharing, zero CoW) and skip the shared chunks;
+    outputs stay bit-identical to the dense oracle."""
+    cfg, params = served
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    reqs = [np.concatenate([prefix, rng.integers(0, cfg.vocab, n)
+                            .astype(np.int32)]) for n in (5, 9)]
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=48,
+                          page_size=8, chunk=8)
+    loop.submit(Request(rid=0, prompt=prefix, max_new_tokens=2))  # primes
+    loop.run()
+    assert loop.prefix.n_nodes == 2
+    loop.submit(Request(rid=1, prompt=reqs[0], max_new_tokens=4))
+    loop.submit(Request(rid=2, prompt=reqs[1], max_new_tokens=4))
+    done = {r.rid: r for r in loop.run()}
+    assert loop.prefill_tokens_saved == 32       # 2 chunks x 2 requests
+    assert loop.cow_copies == 0                  # aligned: pure sharing
+    assert loop.prefix.hit_blocks >= 4
+    for rid, prompt in ((1, reqs[0]), (2, reqs[1])):
+        want = _oracle(params, cfg, prompt, 4)
+        assert np.array_equal(done[rid].output, want), rid
+    loop.pages.check()
+    loop.prefix.check()
+
+
+def test_cow_divergence_mid_decode_bitexact(served):
+    """Identical prompts: the later admissions CoW the final shared
+    page (its tail is recomputed for the last-token logits), then
+    decode diverges into private pages.  The tree's page content must
+    survive untouched — every later request still hits and every
+    output matches the oracle."""
+    cfg, params = served
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=48,
+                          page_size=8, chunk=8)
+    for rid, mn in enumerate((3, 6, 4)):
+        loop.submit(Request(rid=rid, prompt=prompt.copy(),
+                            max_new_tokens=mn))
+    done = {r.rid: r for r in loop.run()}
+    assert loop.cow_copies == 2                  # requests 2 and 3
+    assert loop.prefill_tokens_saved == 16       # 1 chunk saved each
+    for rid, mn in enumerate((3, 6, 4)):
+        want = _oracle(params, cfg, prompt, mn)
+        assert np.array_equal(done[rid].output, want), rid
+    loop.pages.check()
+    loop.prefix.check()
+
+
+def test_cow_partial_page_copy_is_load_bearing(served):
+    """page_size > chunk: the CoW copy carries the cached positions the
+    suffix recompute does NOT cover ([0, 8) of a 16-token page when
+    only the final 8-token chunk reruns).  A broken page copy would
+    corrupt the logits — bit-exactness here validates the copy path."""
+    cfg, params = served
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=64,
+                          page_size=16, chunk=8)
+    loop.submit(Request(rid=0, prompt=prompt, max_new_tokens=3))
+    loop.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=5))
+    done = {r.rid: r for r in loop.run()}
+    assert loop.cow_copies == 1
+    assert loop.prefill_tokens_saved == 8        # first chunk skipped
+    for rid, mn in ((0, 3), (1, 5)):
+        want = _oracle(params, cfg, prompt, mn, s_max=64)
+        assert np.array_equal(done[rid].output, want), rid
+
+
+def test_eviction_and_readmission_bitexact(served):
+    """Pool pressure evicts LRU cached prefixes; a prompt whose pages
+    were evicted re-prefills from scratch and re-inserts — outputs
+    stay exact through the whole churn."""
+    cfg, params = served
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, 16).astype(np.int32)
+               for _ in range(3)]
+    # 6 usable pages; each request needs 3 blocks (16 tokens + growth),
+    # so caching more than one finished prompt forces eviction
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=32,
+                          page_size=8, chunk=8, n_pages=7)
+    order = [0, 1, 2, 0]                         # 0 re-admitted post-evict
+    for i, pi in enumerate(order):
+        loop.submit(Request(rid=i, prompt=prompts[pi].copy(),
+                            max_new_tokens=3))
+    done = {r.rid: r for r in loop.run()}
+    assert loop.prefix.evicted > 0
+    for i, pi in enumerate(order):
+        want = _oracle(params, cfg, prompts[pi], 3, s_max=32)
+        assert np.array_equal(done[i].output, want), i
+    loop.pages.check()
+    loop.prefix.check()
+
+
+def test_own_hits_pinning_pool_falls_back_cacheless(served):
+    """A pool exactly worst-case for one request: the head's own locked
+    hits pin every cached page (refcount 2 — ineligible for eviction),
+    so cache-backed admission can't get its CoW page.  The loop must
+    fall back to a cache-less admission (drop locks, evict, recompute)
+    instead of deadlocking — and stay bit-exact."""
+    cfg, params = served
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=32,
+                          page_size=8, chunk=8, n_pages=5)
+    loop.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    loop.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=4))
+    done = {r.rid: r for r in loop.run()}
+    assert loop.prefix.evicted == 3              # whole tree reclaimed
+    assert loop.prefill_tokens_saved == 0        # fallback recomputed
+    want = _oracle(params, cfg, prompt, 4, s_max=32)
+    for rid in (0, 1):
+        assert np.array_equal(done[rid].output, want), rid
+    loop.pages.check()
+
+
+def test_admission_reserves_fewer_pages_on_prefix_hits(served):
+    """The satellite contract: ``_pages_needed`` accounts for cached
+    blocks, so a pool too small for a worst-case reservation still
+    admits a cached prompt without eviction."""
+    cfg, params = served
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=32,
+                          page_size=8, chunk=8, n_pages=7)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=4)
+    assert loop._pages_needed(req) == 4          # worst case: no cache
+    assert loop._pages_needed(req, n_cached=3) == 2   # keep 2, CoW 1
+    loop.submit(req)
+    loop.run()
+    # tree now holds 3 pages; free = 3 < worst-case 4, but the cached
+    # plan needs only 2 — admission must succeed with zero evictions
+    loop.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=4))
+    done = loop.run()
+    assert loop.prefix.evicted == 0
+    assert loop.prefill_tokens_saved == 16
+    want = _oracle(params, cfg, prompt, 4, s_max=32)
+    assert np.array_equal(done[-1].output, want)
+
+
+# ---------------------------------------------------------------------------
+# edges: page-boundary prefill, sub-page prompts, compile-set invariant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("L,cache", [(16, True), (16, False), (24, True),
+                                     (3, True), (3, False)])
+def test_page_boundary_and_subpage_prompts_bitexact(served, L, cache):
+    """Chunked prefill ending exactly on a page boundary, and prompts
+    shorter than one page (no full page ever enters the tree), both
+    match the dense oracle with the cache on and off."""
+    cfg, params = served
+    rng = np.random.default_rng(10 + L)
+    prompt = rng.integers(0, cfg.vocab, L).astype(np.int32)
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=48,
+                          page_size=8, chunk=8, prefix_cache=cache)
+    loop.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+    done = loop.run()
+    want = _oracle(params, cfg, prompt, 4)
+    assert np.array_equal(done[0].output, want)
+    if cache:
+        assert loop.prefix.n_nodes == L // 8     # 0 for the 3-token case
+        loop.prefix.check()
+
+
+def test_two_compiled_shapes_with_prefix_sharing(served):
+    """Sharing, CoW, and suffix prefill must not add forward shapes:
+    exactly one prefill-chunk trace + one decode trace, and the CoW
+    page copy compiles at most once (it is a memcpy, not a forward)."""
+    cfg, params = served
+    rng = np.random.default_rng(6)
+    prefix = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=64,
+                          page_size=8, chunk=8)
+    reqs = [prefix,
+            np.concatenate([prefix, rng.integers(0, cfg.vocab, 5)
+                            .astype(np.int32)]),
+            prefix.copy(),
+            rng.integers(0, cfg.vocab, 11).astype(np.int32)]
+    for i, p in enumerate(reqs):
+        loop.submit(Request(rid=i, prompt=p, max_new_tokens=3))
+    done = loop.run()
+    assert len(done) == len(reqs)
+    assert loop._prefill_chunk._cache_size() == 1
+    assert loop._decode._cache_size() == 1
+    assert loop._copy_page._cache_size() <= 1
