@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/serve_decode.py --arch xlstm-350m
     PYTHONPATH=src python examples/serve_decode.py --shared-prefix
+    PYTHONPATH=src python examples/serve_decode.py --spec-k 4
 
 Runs the slot-based serving loop (prefill + greedy decode) with each
 serve impl and reports tokens/s (CPU wall time is illustrative; the
@@ -9,7 +10,10 @@ HBM-bytes comparison that matters at scale is in
 ``python -m benchmarks.run --only tlmac_memory``).  Paged-capable
 (gqa) archs go through ``PagedServeLoop`` with the radix-tree prefix
 cache on by default; ``--shared-prefix`` submits requests that share a
-long system prompt and prints the cache's hit/saved/CoW stats.
+long system prompt and prints the cache's hit/saved/CoW stats;
+``--spec-k`` enables self-speculative decoding (n-gram drafter +
+batched verify, outputs bit-identical to plain greedy) and prints the
+accept rate and tokens amortised per slot-step.
 """
 
 import argparse
@@ -55,8 +59,13 @@ def main():
     ap.add_argument("--shared-prefix", action="store_true",
                     help="requests share a long system prompt "
                          "(prefix-cache showcase; needs a gqa arch)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative decoding: draft up to k "
+                         "tokens per slot (n-gram drafter) and verify "
+                         "them in one batched forward (needs a gqa "
+                         "arch; 0 = off)")
     args = ap.parse_args()
-    if args.shared_prefix and args.arch == "xlstm-350m":
+    if (args.shared_prefix or args.spec_k) and args.arch == "xlstm-350m":
         args.arch = "codeqwen1.5-7b"      # needs a paged-capable family
 
     for impl in ("dense", "int8", "tlmac"):
@@ -66,7 +75,8 @@ def main():
         if paged:
             loop = PagedServeLoop(params, cfg, batch_slots=3, s_max=64,
                                   page_size=8, chunk=8,
-                                  prefix_cache=not args.no_prefix_cache)
+                                  prefix_cache=not args.no_prefix_cache,
+                                  spec_k=args.spec_k)
         else:
             loop = ServeLoop(params, cfg, batch_slots=3, s_max=64)
         rng = np.random.default_rng(0)
@@ -86,6 +96,13 @@ def main():
                   f"nodes={s['nodes']} evicted={s['evicted']} "
                   f"prefill_saved={loop.prefill_tokens_saved}tok "
                   f"cow={loop.cow_copies}")
+        if paged and args.spec_k:
+            s = loop.spec_stats()
+            print(f"        spec decode: tokens/step="
+                  f"{s['tokens_per_step']:.2f} "
+                  f"accept_rate={s['accept_rate']:.2f} "
+                  f"verify_steps={s['spec_steps']} "
+                  f"decode_steps={s['decode_steps']}")
 
 
 if __name__ == "__main__":

@@ -97,6 +97,18 @@ class ArchConfig:
                                  # retain (0 = unbounded: bounded only
                                  # by pool pressure, which evicts LRU
                                  # unreferenced prefixes on demand)
+    serve_spec_k: int = 0        # self-speculative decoding on the
+                                 # paged loop (serve/spec.py): draft up
+                                 # to k tokens per live slot, score all
+                                 # k+1 positions in one batched verify
+                                 # forward, keep the longest argmax-
+                                 # matching prefix (0 = off: plain
+                                 # one-token decode steps)
+    serve_spec_drafter: str = "ngram"  # draft proposer: 'ngram'
+                                 # (prompt-lookup over the slot's own
+                                 # context) or 'none'; a Drafter
+                                 # instance can be passed to the loop
+                                 # directly (small-model drafter hook)
     serve_shared_act_quant: bool = True  # swiglu wi/wg share one
                                  # activation quantise+pack (wi's
                                  # a_step); disable for checkpoints

@@ -122,6 +122,36 @@ def write_chunk(k_pages, v_pages, k, v, block_table_row, start):
     return kp, vp
 
 
+def write_spec(k_pages, v_pages, k, v, block_table, positions, n_writes):
+    """Write a fixed-width speculative verify window per slot.
+
+    k/v ``[B, K1, KV, hd]`` — token row ``j`` of slot ``b`` lands at
+    absolute position ``positions[b] + j``.  Only the first
+    ``n_writes[b]`` rows are real (the slot's current token plus its
+    live draft); the remaining rows of the fixed ``K1`` window are
+    padding whose writes are routed to the scratch page (page 0),
+    exactly like an idle slot's decode write — so a slot drafting
+    fewer than ``K1 - 1`` tokens (draft clamped near ``max_new`` /
+    capacity, or an n-gram miss) can share the one compiled verify
+    shape without its padding ever touching live pages.
+
+    Valid rows index the block table like ``write_decode``; the block
+    index is clamped into table range before the gather because padded
+    rows of a slot near capacity may compute ``pos // P`` one past the
+    last block (their page id is overridden to scratch anyway)."""
+    K1 = k.shape[1]
+    P = k_pages.shape[1]
+    pos = positions[:, None] + jnp.arange(K1)[None, :]       # [B, K1]
+    blk = jnp.minimum(pos // P, block_table.shape[1] - 1)
+    pid = jnp.take_along_axis(block_table, blk, axis=1)      # [B, K1]
+    valid = jnp.arange(K1)[None, :] < n_writes[:, None]
+    pid = jnp.where(valid, pid, 0)                           # pad -> scratch
+    off = pos % P
+    kp = k_pages.at[pid, off].set(k.astype(k_pages.dtype))
+    vp = v_pages.at[pid, off].set(v.astype(v_pages.dtype))
+    return kp, vp
+
+
 def copy_page(k_pages, v_pages, src, dst):
     """Copy-on-write: duplicate physical page ``src`` into ``dst`` in
     one layer's K/V pool (``[n_pages, P, KV, hd]``).

@@ -278,6 +278,47 @@ def gqa_prefill_chunk(params, x, cfg, pages, block_table_row, start,
     return y, (kp, vp)
 
 
+def gqa_verify_paged(params, x, cfg, pages, block_table, positions, n_writes,
+                     window: Optional[int] = None,
+                     apply_fn=nn.linear_apply):
+    """Speculative-verify attention: a fixed ``K1``-token window per
+    slot against the paged KV pool.
+
+    ``x [B, K1, d]`` carries each slot's current token followed by its
+    draft; row ``j`` sits at absolute position ``positions[b] + j``.
+    All rows' K/V are written first (padding rows beyond
+    ``n_writes[b]`` land in the scratch page — ``kernels.paged
+    .write_spec``), then every row attends through the block table
+    with its own causal/window mask: row ``j`` sees positions
+    ``<= positions[b] + j`` only, so the row's output is exactly what
+    a sequential decode of the accepted prefix would produce — masked
+    keys (including this step's own later rows and any rejected
+    garbage from earlier verify windows) contribute exact zeros.  The
+    same gather + ``_sdpa`` contraction as the decode oracle keeps the
+    verify logits bit-identical to ``K1`` separate decode steps."""
+    from repro.kernels import paged
+
+    B, K1, _ = x.shape
+    q, k, v = _qkv(params, x, cfg, apply_fn)
+    pos = positions[:, None] + jnp.arange(K1)[None, :]       # [B, K1]
+    sin, cos = nn.rotary_embedding(pos, cfg.kv_head_dim)
+    q = nn.apply_rotary(q, sin, cos)
+    k = nn.apply_rotary(k, sin, cos)
+    kp, vp = paged.write_spec(pages[0], pages[1], k, v, block_table,
+                              positions, n_writes)
+    kc, vc = paged.gather_kv(kp, vp, block_table)
+    S_alloc = kc.shape[1]
+    iq = pos[:, :, None]                                     # [B, K1, 1]
+    ik = jnp.arange(S_alloc)[None, None, :]
+    mask = ik <= iq
+    if window is not None:
+        mask &= ik > iq - window
+    out = _sdpa(q, kc, vc, mask[:, None, None], cfg)         # [B,K1,H,hd]
+    H, hd = cfg.n_heads, cfg.kv_head_dim
+    y = apply_fn(params["wo"], out.reshape(B, K1, H * hd), cfg)
+    return y, (kp, vp)
+
+
 # ---------------------------------------------------------------------------
 # MLA — Multi-head Latent Attention (DeepSeek-V3 / Kimi-K2)
 # ---------------------------------------------------------------------------

@@ -290,7 +290,13 @@ def apply_block(
         new_cache = cache
         if paged_ctx is not None and kind in PAGED_KINDS:
             pages = (cache["k"], cache["v"])
-            if decode:
+            if "n_writes" in paged_ctx:
+                y, (kc, vc) = attn.gqa_verify_paged(
+                    params["attn"], h, cfg, pages,
+                    paged_ctx["block_table"], paged_ctx["positions"],
+                    paged_ctx["n_writes"], window=window, apply_fn=apply_fn,
+                )
+            elif decode:
                 y, (kc, vc) = attn.gqa_decode_paged(
                     params["attn"], h, cfg, pages,
                     paged_ctx["block_table"], paged_ctx["positions"],
@@ -804,6 +810,52 @@ def prefill_chunk(params, caches, tokens, start, block_table_row, cfg,
     head = params.get("head", params["embed"])
     logits = nn.logits_apply(head, x, vocab=cfg.vocab)
     return logits[0, 0, : cfg.vocab], new_caches
+
+
+def verify_step_paged(params, caches, tokens, positions, n_writes,
+                      block_table, cfg):
+    """Speculative-decoding verify pass: score a fixed ``K1``-token
+    window per slot in ONE forward.
+
+    tokens ``[B, K1]`` — each live slot's current token followed by its
+    drafted continuation (row ``j`` at absolute position
+    ``positions[b] + j``); ``n_writes [B]`` counts the real rows per
+    slot (current token + live draft length — padding rows' KV writes
+    land in the scratch page and their logits are never read).
+    Returns ``(logits [B, K1, vocab], caches)``: row ``j``'s logits
+    are bit-identical to what a sequential ``decode_step_paged`` would
+    produce after accepting rows ``0..j``, so greedy acceptance on the
+    host (longest draft prefix matching the argmax chain, plus one
+    bonus token) reproduces plain decoding exactly — rollback of
+    rejected rows is just not advancing ``positions`` past them; their
+    page writes sit beyond every future mask until overwritten.
+
+    This is the serve loop's third and final compiled forward shape
+    (chunk prefill, decode, verify).  Verify attention always runs the
+    gather + ``_sdpa`` oracle contraction (no ``impl`` dispatch: the
+    flash paths are single-query) — the serve loop therefore pins its
+    decode shape to the ``lax`` oracle whenever speculation is on, so
+    every emitted token comes from the same numerics."""
+    apply_fn = _apply_fn_for("serve")
+    paged_ctx = {
+        "block_table": block_table,
+        "positions": positions,
+        "n_writes": n_writes,
+    }
+    x = nn.embed_apply(params["embed"], tokens)
+    x = shard_hint(x, P(("pod", "data"), None, None))
+    segs = segments_for(cfg)
+    new_caches = []
+    for seg, sp, ch in zip(segs, params["segments"], caches):
+        x, nc, _ = _segment_scan_cached(
+            seg, sp, ch, x, cfg, apply_fn, pos=None, enc_out=None,
+            decode=True, paged_ctx=paged_ctx,
+        )
+        new_caches.append(nc)
+    x = nn.rmsnorm_apply(params["final_norm"], x)
+    head = params.get("head", params["embed"])
+    logits = nn.logits_apply(head, x, vocab=cfg.vocab)
+    return logits[:, :, : cfg.vocab], new_caches
 
 
 def decode_step_paged(params, caches, tokens, positions, block_table, cfg):

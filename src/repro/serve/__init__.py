@@ -1,3 +1,4 @@
 from repro.serve.loop import ServeLoop, Request  # noqa: F401
 from repro.serve.paged import PagedServeLoop, PageManager  # noqa: F401
 from repro.serve.prefix_cache import PrefixCache, RadixNode  # noqa: F401
+from repro.serve.spec import Drafter, NGramDrafter, make_drafter  # noqa: F401

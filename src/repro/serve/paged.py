@@ -8,12 +8,25 @@ Replaces the dense loop's two dominant costs at once:
   them — no multi-GB cache copies, no left-padding, no shared decode
   clock (each slot advances at its own position).
 - **Compiles.**  Prompts are prefilled in fixed-size chunks appended to
-  the slot's pages, so the whole compile set is exactly TWO forward
-  shapes: one ``[1, chunk]`` prefill chunk and one ``[B, 1]`` decode
-  step — for *any* mix of prompt lengths.  The dense loop's
-  ``refill_quantum`` length-quantisation workaround (and its per-length
-  retraces) is gone; admission happens the moment a slot and pages are
-  free.
+  the slot's pages, so the whole compile set is at most THREE forward
+  shapes: one ``[1, chunk]`` prefill chunk, one ``[B, 1]`` decode
+  step, and (speculation enabled) one ``[B, k+1]`` verify window — for
+  *any* mix of prompt lengths.  The dense loop's ``refill_quantum``
+  length-quantisation workaround (and its per-length retraces) is
+  gone; admission happens the moment a slot and pages are free.
+- **Decode amortisation.**  Self-speculative decoding
+  (``cfg.serve_spec_k`` > 0): a model-free drafter (serve/spec.py,
+  prompt-lookup n-grams by default; a small-model drafter plugs into
+  the same protocol) proposes up to ``k`` tokens per live slot, one
+  batched verify forward scores all ``k+1`` positions through the
+  same paged attention, and greedy acceptance keeps the longest draft
+  prefix matching the model's own argmax chain plus one bonus token —
+  1 to ``k+1`` tokens per weight pass.  Rejected rows roll back by
+  simply not advancing ``lens``: their page writes sit at positions
+  beyond every future mask until plain writes overwrite them, and
+  padding rows of the fixed window are routed to the scratch page.
+  Outputs are bit-identical to plain greedy decode at every accept
+  rate (the acceptance rule replays the argmax chain exactly).
 - **Recompute.**  A radix-tree prefix cache (serve/prefix_cache.py)
   keys finished prompts' pages by token content.  Admission maps the
   longest cached page-aligned prefix read-only into the slot's block
@@ -53,6 +66,7 @@ from repro.kernels.paged import PageSpec, spec_for
 from repro.models import lm
 from repro.serve.loop import Request
 from repro.serve.prefix_cache import PrefixCache
+from repro.serve.spec import make_drafter
 
 
 class PageManager:
@@ -146,7 +160,8 @@ class PagedServeLoop:
                  eos_id: Optional[int] = None, page_size: int = 16,
                  chunk: int = 16, n_pages: Optional[int] = None,
                  attn_impl: Optional[str] = None,
-                 prefix_cache: Optional[bool] = None):
+                 prefix_cache: Optional[bool] = None,
+                 spec_k: Optional[int] = None, drafter=None):
         if not lm.supports_paged(cfg):
             raise ValueError(
                 f"config {cfg.name!r} has non-pageable block kinds; "
@@ -175,11 +190,53 @@ class PagedServeLoop:
         self.pages = PageManager(self.spec.n_pages)
         if prefix_cache is None:
             prefix_cache = getattr(cfg, "serve_prefix_cache", True)
+        # construction-time setting: _finish keys its page-transfer
+        # decision off this flag, NOT off `self.prefix is (not) None`,
+        # so a mid-flight toggle of the attribute can neither divert a
+        # cache-less loop's pages into a foreign tree nor change the
+        # accounting of requests admitted under the original setting
+        self._prefix_enabled = bool(prefix_cache)
         self.prefix: Optional[PrefixCache] = (
             PrefixCache(page_size, self.pages,
                         max_pages=getattr(cfg, "serve_prefix_cache_pages", 0))
             if prefix_cache else None
         )
+        if spec_k is None:
+            spec_k = getattr(cfg, "serve_spec_k", 0)
+        self.spec_k = int(spec_k)
+        if self.spec_k > 0:
+            self.drafter = make_drafter(
+                drafter if drafter is not None
+                else getattr(cfg, "serve_spec_drafter", "ngram"))
+        else:
+            self.drafter = None
+            if drafter is not None and make_drafter(drafter) is not None:
+                raise ValueError(
+                    "a drafter was passed but speculation is off; set "
+                    "spec_k > 0 (or cfg.serve_spec_k) to enable it"
+                )
+        if self.drafter is not None:
+            # verify attention has no impl dispatch (the flash paths
+            # are single-query): it always runs the gather + _sdpa
+            # oracle contraction.  Pin the decode step to the same
+            # 'lax' oracle so a tuned flash winner can never mix two
+            # numerically different kernels into one output stream —
+            # the bit-identical-at-every-accept-rate contract must
+            # hold under ANY autotune cache state.  Cheap: with a
+            # drafter on, plain decode steps are the rare case.  An
+            # explicitly requested conflicting impl is an error, not a
+            # silent override.
+            if attn_impl is not None and attn_impl != "lax":
+                raise ValueError(
+                    f"attn_impl={attn_impl!r} conflicts with "
+                    "speculative decoding: verify attention always "
+                    "runs the lax oracle contraction, so the decode "
+                    "step is pinned to 'lax' to keep one output "
+                    "stream on one kernel — pass attn_impl='lax' (or "
+                    "None), or disable speculation"
+                )
+            cfg = dataclasses.replace(cfg, serve_paged_attn_impl="lax")
+            self.cfg = cfg
         self.caches, _ = lm.init_caches(cfg, batch_slots, s_max,
                                         paged=self.spec)
         self.queue = deque()
@@ -188,6 +245,18 @@ class PagedServeLoop:
         self.prefill_tokens_run = 0   # chunk tokens actually prefilled
         self.prefill_tokens_saved = 0  # chunk tokens skipped via the cache
         self.cow_copies = 0           # copy-on-write page duplications
+        self.decode_steps = 0         # plain [B, 1] decode forwards
+        self.spec_steps = 0           # [B, k+1] verify forwards
+        self.spec_proposed = 0        # draft tokens offered to verify
+        self.spec_accepted = 0        # draft tokens the argmax confirmed
+        self.gen_tokens = 0           # tokens emitted by decode/verify
+                                      # (prefill argmax tokens excluded)
+        self.slot_steps = 0           # live-slot participations in
+                                      # decode/verify forwards: plain
+                                      # decode emits exactly 1 token
+                                      # per slot-step, so tokens/step
+                                      # is the per-slot amortisation
+                                      # factor, not a batching artifact
 
         # host-side scheduler state (numpy; shipped to device per step)
         self.block_table = np.zeros((batch_slots, self.spec.max_blocks),
@@ -195,9 +264,11 @@ class PagedServeLoop:
         self.lens = np.zeros(batch_slots, np.int32)
         self.slots: List[Optional[dict]] = [None] * batch_slots
 
-        # the ONLY two jitted forward shapes the loop ever compiles
-        # (the CoW page copy below is a cache-to-cache device memcpy,
-        # not a forward pass; it adds exactly one more trace of its own)
+        # the ONLY jitted forward shapes the loop ever compiles: one
+        # prefill chunk, one decode step, and — speculation enabled —
+        # one verify window.  (The CoW page copy below is a
+        # cache-to-cache device memcpy, not a forward pass; it adds
+        # exactly one more trace of its own.)
         donate = () if jax.default_backend() == "cpu" else (1,)
         self._prefill_chunk = jax.jit(
             lambda p, c, t, start, bt_row, last: lm.prefill_chunk(
@@ -209,6 +280,11 @@ class PagedServeLoop:
                 p, c, t, pos, bt, cfg),
             donate_argnums=donate,
         )
+        self._verify = jax.jit(
+            lambda p, c, t, pos, nw, bt: lm.verify_step_paged(
+                p, c, t, pos, nw, bt, cfg),
+            donate_argnums=donate,
+        ) if self.drafter is not None else None
         cow_donate = () if jax.default_backend() == "cpu" else (0,)
         # a fresh lambda per loop keeps the jit cache (and its
         # _cache_size trace count) per-instance, like the two above
@@ -403,7 +479,7 @@ class PagedServeLoop:
         self.done.append(entry["req"])
         blocks = entry["blocks"]
         n_prompt = len(entry["req"].prompt) // self.spec.page_size
-        if self.prefix is not None and n_prompt:
+        if self._prefix_enabled and self.prefix is not None and n_prompt:
             # the slot's full prompt pages transfer into the radix tree
             # instead of being freed (insert dedupes against existing
             # nodes and releases duplicates/map references itself)
@@ -472,30 +548,182 @@ class PagedServeLoop:
         self.block_table[slot_i, blk] = dst
 
     def _decode_drain(self) -> None:
-        P = self.spec.page_size
         while any(s is not None for s in self.slots):
             live = [i for i in range(self.B) if self.slots[i] is not None]
-            cur = np.zeros((self.B, 1), np.int32)
-            for i in live:
-                self._ensure_writable(i, self.slots[i],
-                                      int(self.lens[i]) // P)
-                cur[i, 0] = self.slots[i]["cur"]
-            logits, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(cur),
-                jnp.asarray(self.lens), jnp.asarray(self.block_table),
-            )
-            nxt = np.asarray(jnp.argmax(logits, -1))
-            freed = False
-            for i in live:
-                entry = self.slots[i]
-                self.lens[i] += 1
-                tok = int(nxt[i])
-                entry["out"].append(tok)
-                entry["cur"] = tok
-                if self._done_now(entry) or self.lens[i] >= self.S_max:
-                    self._finish(i, entry)
-                    freed = True
+            drafts = self._propose(live)
+            if any(len(d) for d in drafts.values()):
+                freed = self._verify_once(live, drafts)
+            else:
+                # no slot drafted anything (speculation off, n-gram
+                # miss, or every slot clamped to 0): the cheap [B, 1]
+                # decode shape — a verify window would pad every row
+                freed = self._decode_once(live)
             if freed:
                 # continuous batching: freed slots admit immediately —
                 # other slots keep decoding, nobody waits for a drain
                 self._fill_free_slots(mid_decode=True)
+
+    # -- speculative decoding ------------------------------------------------
+
+    def _draft_cap(self, i: int, entry) -> int:
+        """Longest draft slot ``i`` may verify this step.  Bounded by
+        ``max_new`` (a full accept must not overshoot the request's
+        budget: ``k`` drafts + 1 bonus <= remaining), by ``S_max``, and
+        by the slot's allocated pages — so every *valid* verify write
+        stays within the positions plain decode would have written
+        (``<= L + max_new - 2``) and admission's page reservation
+        covers speculation with no extra pages."""
+        lens = int(self.lens[i])
+        remaining = entry["req"].max_new_tokens - len(entry["out"])
+        room = min(self.S_max,
+                   len(entry["blocks"]) * self.spec.page_size) - 1 - lens
+        return max(0, min(self.spec_k, remaining - 1, room))
+
+    def _propose(self, live: List[int]) -> dict:
+        """Per-slot draft proposals (empty arrays when not drafting)."""
+        empty = np.zeros(0, np.int32)
+        if self.drafter is None:
+            return {i: empty for i in live}
+        drafts = {}
+        for i in live:
+            entry = self.slots[i]
+            cap = self._draft_cap(i, entry)
+            if cap <= 0:
+                drafts[i] = empty
+                continue
+            ctx = np.concatenate([
+                np.asarray(entry["req"].prompt, np.int32),
+                np.asarray(entry["out"], np.int32),
+            ])
+            d = np.asarray(self.drafter.propose(ctx, cap), np.int32)
+            drafts[i] = d[:cap]
+        return drafts
+
+    def _accept(self, i: int, entry, tokens):
+        """Append ``tokens`` to slot ``i`` one by one with the exact
+        finish checks of a sequential decode (eos truncates the rest —
+        the oracle never emits past it).  Returns ``(appended,
+        finished)``: how many tokens were actually emitted and whether
+        the slot finished."""
+        for n, t in enumerate(tokens):
+            self.lens[i] += 1
+            tok = int(t)
+            entry["out"].append(tok)
+            entry["cur"] = tok
+            self.gen_tokens += 1
+            if self._done_now(entry) or self.lens[i] >= self.S_max:
+                self._finish(i, entry)
+                return n + 1, True
+        return len(tokens), False
+
+    def _decode_once(self, live: List[int]) -> bool:
+        """One plain ``[B, 1]`` decode step.  Returns True if any slot
+        finished (the caller then refills)."""
+        P = self.spec.page_size
+        cur = np.zeros((self.B, 1), np.int32)
+        for i in live:
+            self._ensure_writable(i, self.slots[i],
+                                  int(self.lens[i]) // P)
+            cur[i, 0] = self.slots[i]["cur"]
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(cur),
+            jnp.asarray(self.lens), jnp.asarray(self.block_table),
+        )
+        self.decode_steps += 1
+        self.slot_steps += len(live)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        freed = False
+        for i in live:
+            _, fin = self._accept(i, self.slots[i], [int(nxt[i])])
+            freed |= fin
+        return freed
+
+    def _verify_once(self, live: List[int], drafts: dict) -> bool:
+        """One ``[B, k+1]`` verify step: score every slot's current
+        token + draft in a single forward, then keep the longest draft
+        prefix matching the model's own argmax chain plus one bonus
+        token.
+
+        Rollback of rejected rows costs nothing: ``lens`` only
+        advances over accepted tokens, so the rejected rows' page
+        writes sit beyond every future attention mask until later
+        (valid) writes overwrite them — and rows past ``n_writes``
+        were already routed to the scratch page inside the kernel.
+        Shared (prefix-cached) pages are protected the same way plain
+        decode protects them: ``_ensure_writable`` CoWs every block
+        the window's valid writes touch before the forward runs."""
+        K1 = self.spec_k + 1
+        P = self.spec.page_size
+        toks = np.zeros((self.B, K1), np.int32)
+        n_writes = np.zeros(self.B, np.int32)
+        for i in live:
+            entry = self.slots[i]
+            d = drafts[i]
+            toks[i, 0] = entry["cur"]
+            toks[i, 1: 1 + len(d)] = d
+            n_writes[i] = 1 + len(d)
+            lens = int(self.lens[i])
+            for blk in range(lens // P, (lens + len(d)) // P + 1):
+                self._ensure_writable(i, entry, blk)
+        logits, self.caches = self._verify(
+            self.params, self.caches, jnp.asarray(toks),
+            jnp.asarray(self.lens), jnp.asarray(n_writes),
+            jnp.asarray(self.block_table),
+        )
+        self.spec_steps += 1
+        self.slot_steps += len(live)
+        greedy = np.asarray(jnp.argmax(logits, -1))          # [B, K1]
+        freed = False
+        for i in live:
+            entry = self.slots[i]
+            d, g = drafts[i], greedy[i]
+            m = 0
+            while m < len(d) and g[m] == d[m]:
+                m += 1
+            self.spec_proposed += len(d)
+            # g[:m] == the accepted draft; g[m] is the bonus token the
+            # model emits after it (for m == 0 that is row 0's argmax:
+            # exactly the plain decode step's token).  Accepted-draft
+            # stats count only tokens actually EMITTED (eos truncation
+            # mid-window discards the rest of the match)
+            appended, fin = self._accept(i, entry, g[: m + 1])
+            self.spec_accepted += min(appended, m)
+            freed |= fin
+        return freed
+
+    # -- introspection -------------------------------------------------------
+
+    def spec_stats(self) -> dict:
+        """Decode-phase throughput accounting (the bench's numbers).
+
+        ``tokens_per_step`` is per SLOT-step — tokens emitted divided
+        by live-slot participations in decode/verify forwards — so
+        plain greedy decode measures exactly 1.0 at any batch size and
+        the number is the speculation amortisation factor alone."""
+        return {
+            "decode_steps": self.decode_steps,
+            "spec_steps": self.spec_steps,
+            "proposed": self.spec_proposed,
+            "accepted": self.spec_accepted,
+            "accept_rate":
+                self.spec_accepted / max(self.spec_proposed, 1),
+            "tokens_per_step": self.gen_tokens / max(self.slot_steps, 1),
+        }
+
+    def compiled_shapes(self) -> dict:
+        """Per-jit trace counts (the compile-set invariant)."""
+        out = {
+            "chunk": self._prefill_chunk._cache_size(),
+            "decode": self._decode._cache_size(),
+        }
+        if self._verify is not None:
+            out["verify"] = self._verify._cache_size()
+        return out
+
+    def check_compiled(self) -> None:
+        """Assert the compile-set invariant: at most one trace per
+        forward entry point (chunk, decode, verify) and at most one
+        for the CoW page memcpy — ANY extra shape anywhere fails."""
+        for name, n in self.compiled_shapes().items():
+            assert n <= 1, f"{name} forward retraced: {n} shapes"
+        assert self._copy_page._cache_size() <= 1, "CoW copy retraced"

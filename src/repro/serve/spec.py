@@ -1,0 +1,107 @@
+"""Draft proposers for self-speculative decoding on the paged loop.
+
+TLMAC's trade is reuse-over-recompute: one table read replaces a MAC's
+worth of memory traffic.  The serving-side analogue on the *decode*
+axis is amortising one weight pass over several tokens: a cheap
+drafter proposes ``k`` continuation tokens per live slot, a single
+batched verify forward (``lm.verify_step_paged``) scores all ``k+1``
+positions at once, and greedy acceptance keeps the longest draft
+prefix that matches the model's own argmax chain — every verify step
+yields between 1 and ``k+1`` tokens for one weight pass.
+
+The drafters here are *model-free* (prompt-lookup / n-gram): they
+propose by matching the context's own recent suffix against its
+earlier occurrences, so they cost no parameters, no extra forward, and
+no calibration — and acceptance is naturally high exactly where
+decoding is cheapest to speed up (repetitive spans: code, templated
+text, multi-turn echoes).  A learned small-model drafter plugs into
+the same ``Drafter`` protocol (see ``make_drafter``); wiring one up is
+a ROADMAP follow-on.
+
+Correctness never depends on the drafter: a bad draft only costs the
+wasted verify rows (their page writes are routed to the scratch page
+or overwritten before any mask exposes them), and the accepted chain
+is the model's own greedy output by construction.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+class Drafter:
+    """Protocol: propose up to ``k`` continuation tokens for a context.
+
+    ``context`` is the slot's full token history (prompt + generated,
+    including the current not-yet-verified token); the return value is
+    a 1-D int array of length ``<= k`` (empty = nothing worth
+    proposing; the loop then falls back to a plain decode step for
+    the batch when no slot drafts)."""
+
+    def propose(self, context: np.ndarray, k: int) -> np.ndarray:
+        raise NotImplementedError
+
+
+class NGramDrafter(Drafter):
+    """Prompt-lookup drafting: match the context's trailing n-gram
+    against its earlier occurrences and propose the continuation.
+
+    Tries n-gram sizes from ``max_n`` down to ``min_n``; the most
+    recent earlier match wins (recency tracks the current local
+    pattern — repetitive generation loops, re-quoted prompt spans).
+    Pure host-side numpy over a few hundred tokens per slot per step:
+    negligible next to a forward pass."""
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        if not 1 <= min_n <= max_n:
+            raise ValueError(f"need 1 <= min_n <= max_n, got "
+                             f"({min_n}, {max_n})")
+        self.max_n = max_n
+        self.min_n = min_n
+
+    def propose(self, context: np.ndarray, k: int) -> np.ndarray:
+        ctx = np.asarray(context)
+        L = len(ctx)
+        if k <= 0:
+            return np.zeros(0, np.int32)
+        for n in range(self.max_n, self.min_n - 1, -1):
+            if L < n + 1:
+                continue
+            pat = ctx[L - n:]
+            # windows[i] == ctx[i : i + n]; latest match strictly before
+            # the suffix itself
+            windows = np.lib.stride_tricks.sliding_window_view(ctx, n)
+            hits = np.flatnonzero((windows[: L - n] == pat).all(axis=1))
+            if hits.size:
+                i = int(hits[-1])
+                cont = ctx[i + n: i + n + k]
+                if cont.size:
+                    return cont.astype(np.int32)
+        return np.zeros(0, np.int32)
+
+
+DRAFTERS = {"ngram": NGramDrafter}
+
+
+def make_drafter(spec: "str | Drafter | None") -> Optional[Drafter]:
+    """Resolve ``cfg.serve_spec_drafter`` into a ``Drafter``.
+
+    Accepts a registry name (``'ngram'``), ``'none'``/``None`` (no
+    drafting — the loop runs plain decode steps), or an already-built
+    ``Drafter`` instance — the hook a learned small-model drafter uses
+    to plug in without touching the serve loop."""
+    if spec is None or spec == "none":
+        return None
+    if isinstance(spec, Drafter):
+        return spec
+    if isinstance(spec, str):
+        try:
+            return DRAFTERS[spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown drafter {spec!r}; known: {sorted(DRAFTERS)} "
+                "(or pass a serve.spec.Drafter instance)"
+            ) from None
+    raise TypeError(f"drafter spec must be str/None/Drafter, got {spec!r}")

@@ -1,0 +1,134 @@
+"""Cross-family paged-vs-dense oracle matrix (this PR's satellite:
+replaces the single-config spot checks that rode in test_paged_serve).
+
+One contract, systematically: for EVERY ``lm.supports_paged`` config
+family — plain GQA at rep=1 and rep=4, the VLM backbone, a
+sliding-window (``attn_local``) variant, and a MoE (``attn_moe``)
+variant — the paged loop's greedy outputs must be BIT-IDENTICAL to
+each request run solo through the dense-cache ``ServeLoop``:
+
+- with and without the radix prefix cache (the cache must be
+  invisible to the math), and
+- across refill boundaries (more requests than slots, mixed lengths:
+  mid-decode admissions re-using freed pages).
+
+The window variant runs in the pre-wrap regime (``local_window`` >=
+every request's final length): there the dense ring buffer stores
+position ``p`` at index ``p`` and both paths compute the identical
+masked softmax.  Past wrap-around the dense ring's prefill truncation
+(last-W keys at indices ``0..W-1``) and its decode indexing
+(``pos % W``) disagree with each other, so absolute-position paged
+attention is the better-defined path and bitwise comparison is
+meaningless; window *masking* correctness at long context is covered
+by the kernel-level oracle tests (test_paged_serve)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import lm
+from repro.serve.loop import Request, ServeLoop
+from repro.serve.paged import PagedServeLoop
+
+# family key -> builder.  Variants derive from smoke configs: the
+# window family is attn_local-only (hybrid machinery, no recurrence),
+# the moe family swaps deepseek's MLA (non-pageable) for GQA so the
+# attn_moe block kind runs the paged path.
+FAMILY_CFGS = {
+    "codeqwen-gqa": lambda: smoke_config("codeqwen1.5-7b"),
+    "minicpm-gqa": lambda: smoke_config("minicpm-2b"),
+    "mistral-gqa-r4": lambda: smoke_config("mistral-large-123b"),
+    "command-r-gqa-r4": lambda: smoke_config("command-r-35b"),
+    "internvl2-vlm": lambda: smoke_config("internvl2-76b"),
+    "window-local": lambda: dataclasses.replace(
+        smoke_config("codeqwen1.5-7b"), family="hybrid",
+        block_pattern=("attn_local",), local_window=24,
+        name="cq-window-local"),
+    "moe-gqa": lambda: dataclasses.replace(
+        smoke_config("deepseek-v3-671b"), attn_kind="gqa",
+        name="ds-moe-gqa"),
+}
+
+# more requests (5) than slots (2), mixed lengths spanning page/chunk
+# boundaries, short enough to stay pre-wrap for window-local
+# (max 11 + 6 = 17 < 24)
+LENGTHS = (6, 11, 3, 9, 5)
+MAX_NEW = (4, 6, 3, 5, 4)
+S_MAX = 48
+
+_cache: dict = {}
+
+
+def _family(key):
+    """(cfg, params, oracle outputs) per family, built once: the dense
+    oracle runs every request solo through ONE batch_slots=1 loop (the
+    queue drains one request per batch), so the whole family pays a
+    single dense decode trace."""
+    if key in _cache:
+        return _cache[key]
+    cfg = FAMILY_CFGS[key]()
+    assert lm.supports_paged(cfg), key
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    solo = ServeLoop(params, cfg, batch_slots=1, s_max=S_MAX)
+    for i, (p, mn) in enumerate(_workload(cfg)):
+        # one submit per run(): each request is processed truly solo
+        # (an empty queue means no mid-decode refill, whose left-padded
+        # prefill is a different computation), while the loop instance
+        # — and its single compiled decode shape — is reused
+        solo.submit(Request(rid=i, prompt=p, max_new_tokens=mn))
+        solo.run()
+    want = {r.rid: r.output for r in solo.done}
+    _cache[key] = (cfg, params, want)
+    return _cache[key]
+
+
+def _workload(cfg):
+    rng = np.random.default_rng(7)
+    return [(rng.integers(0, cfg.vocab, n).astype(np.int32), mn)
+            for n, mn in zip(LENGTHS, MAX_NEW)]
+
+
+def _run_paged(cfg, params, **kw):
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=S_MAX,
+                          page_size=8, chunk=8, **kw)
+    for i, (p, mn) in enumerate(_workload(cfg)):
+        loop.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn))
+    done = {r.rid: r.output for r in loop.run()}
+    return loop, done
+
+
+@pytest.mark.parametrize("prefix_cache", [True, False],
+                         ids=["cache", "nocache"])
+@pytest.mark.parametrize("family", sorted(FAMILY_CFGS))
+def test_paged_greedy_bitexact_vs_dense_oracle(family, prefix_cache):
+    cfg, params, want = _family(family)
+    loop, done = _run_paged(cfg, params, prefix_cache=prefix_cache)
+    assert loop.refills >= 3            # rids 2..4 admitted mid-decode
+    assert set(done) == set(want)
+    for rid in want:
+        assert np.array_equal(done[rid], want[rid]), \
+            (family, prefix_cache, rid, done[rid], want[rid])
+    loop.check_compiled()
+    loop.pages.check()
+    if prefix_cache:
+        loop.prefix.check()
+
+
+@pytest.mark.parametrize("family", ["window-local", "mistral-gqa-r4"])
+def test_spec_decode_matrix_bitexact(family):
+    """Speculation composes with every family detail the matrix covers
+    — here the two that interact with the verify shape the hardest:
+    the sliding-window mask applied per verify row, and grouped heads
+    (rep=4) in the gathered verify attention.  Same oracle, same
+    bit-exactness bar, prefix cache on."""
+    cfg, params, want = _family(family)
+    loop, done = _run_paged(cfg, params, spec_k=3)
+    for rid in want:
+        assert np.array_equal(done[rid], want[rid]), (family, rid)
+    stats = loop.spec_stats()
+    assert stats["spec_steps"] > 0      # speculation actually engaged
+    loop.check_compiled()
+    loop.pages.check()

@@ -1,0 +1,486 @@
+"""Self-speculative decoding on the paged serve loop (this PR's
+tentpole surface).
+
+The contract extends the paged loop's usual one across speculation:
+greedy outputs with drafting enabled must be BIT-IDENTICAL to the
+dense ``ServeLoop`` oracle at EVERY accept rate — perfect drafts (full
+accepts), garbage drafts (pure rollback), and everything between —
+including rollback landing next to prefix-cached (shared, CoW'd)
+pages, while the compile set grows to exactly THREE forward shapes
+(chunk, decode, verify) and never a fourth."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback sweep
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import smoke_config
+from repro.kernels import paged
+from repro.models import lm
+from repro.serve.loop import Request, ServeLoop
+from repro.serve.paged import PagedServeLoop
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.spec import Drafter, NGramDrafter, make_drafter
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    return cfg, params
+
+
+def _oracle_outputs(params, cfg, reqs, s_max=48):
+    """Solo dense-loop output per request (one loop instance, one
+    submit per run: no mid-decode refills, one decode trace)."""
+    solo = ServeLoop(params, cfg, batch_slots=1, s_max=s_max)
+    for i, (p, mn) in enumerate(reqs):
+        solo.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn))
+        solo.run()
+    return {r.rid: r.output for r in solo.done}
+
+
+class ReplayDrafter(Drafter):
+    """Test drafter with a dial-an-accept-rate knob: replays each
+    request's known oracle continuation, corrupting every proposed
+    token independently with probability ``corrupt_p``.  ``p=0`` makes
+    every draft fully correct (maximum accepts), ``p=1`` rejects every
+    window at its first row (pure rollback)."""
+
+    def __init__(self, streams, corrupt_p: float, vocab: int, seed=0):
+        # streams: list of full token arrays (prompt + oracle output)
+        self.streams = [np.asarray(s, np.int64) for s in streams]
+        self.p = corrupt_p
+        self.vocab = vocab
+        self.rng = np.random.default_rng(seed)
+
+    def propose(self, context, k):
+        ctx = np.asarray(context, np.int64)
+        for s in self.streams:
+            if len(s) >= len(ctx) and np.array_equal(s[: len(ctx)], ctx):
+                d = s[len(ctx): len(ctx) + k].astype(np.int32)
+                flip = self.rng.random(len(d)) < self.p
+                return np.where(flip, (d + 1) % self.vocab, d)
+        return np.zeros(0, np.int32)
+
+
+def _reqs(cfg, rng, lengths, max_new):
+    return [(rng.integers(0, cfg.vocab, n).astype(np.int32), mn)
+            for n, mn in zip(lengths, max_new)]
+
+
+# ---------------------------------------------------------------------------
+# drafters (serve/spec.py)
+# ---------------------------------------------------------------------------
+
+
+def test_ngram_drafter_prompt_lookup():
+    d = NGramDrafter(max_n=3, min_n=1)
+    ctx = np.array([7, 1, 2, 3, 9, 9, 1, 2, 3], np.int32)
+    # trailing trigram (1,2,3) matched at index 1 -> continuation 9,9,1
+    assert d.propose(ctx, 3).tolist() == [9, 9, 1]
+    assert d.propose(ctx, 1).tolist() == [9]
+    # no recurrence at any n: nothing proposed
+    assert d.propose(np.arange(6, dtype=np.int32), 3).size == 0
+    # recency: the LATEST earlier occurrence wins
+    ctx2 = np.array([5, 1, 8, 8, 5, 1, 4, 4, 5, 1], np.int32)
+    assert d.propose(ctx2, 2).tolist() == [4, 4]
+    assert d.propose(ctx2, 0).size == 0
+    with pytest.raises(ValueError, match="min_n"):
+        NGramDrafter(max_n=1, min_n=2)
+
+
+def test_make_drafter_factory():
+    assert isinstance(make_drafter("ngram"), NGramDrafter)
+    assert make_drafter("none") is None and make_drafter(None) is None
+    custom = NGramDrafter(max_n=2)
+    assert make_drafter(custom) is custom       # small-model drafter hook
+    with pytest.raises(ValueError, match="unknown drafter"):
+        make_drafter("tiny-llama")
+    with pytest.raises(TypeError):
+        make_drafter(7)
+
+
+# ---------------------------------------------------------------------------
+# kernel: the fixed verify-window write
+# ---------------------------------------------------------------------------
+
+
+def test_write_spec_routes_padding_to_scratch():
+    rng = np.random.default_rng(0)
+    B, P, MB, KV, hd, K1 = 3, 8, 4, 2, 4, 4
+    n_pages = B * MB + 1
+    kp = jnp.asarray(rng.normal(size=(n_pages, P, KV, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, P, KV, hd)), jnp.float32)
+    bt = np.zeros((B, MB), np.int32)
+    for b in range(2):
+        bt[b] = 1 + b * MB + np.arange(MB)
+    # slot 2 idle: all-zero row
+    positions = np.array([5, 30, 0], np.int32)   # slot 1 writes past a
+    n_writes = np.array([4, 2, 0], np.int32)     # page boundary (30->31)
+    k_new = jnp.ones((B, K1, KV, hd))
+    kp2, _ = paged.write_spec(kp, vp, k_new, k_new, jnp.asarray(bt),
+                              jnp.asarray(positions), jnp.asarray(n_writes))
+    kp2 = np.asarray(kp2)
+    expect = np.asarray(kp).copy()
+    one = np.ones((KV, hd))
+    for b, (pos, nw) in enumerate(zip(positions, n_writes)):
+        for j in range(K1):
+            p = pos + j
+            pid = bt[b, p // P] if j < nw else 0
+            expect[pid, p % P if j < nw else p % P] = one
+    # valid rows landed exactly where the block table says
+    for b, (pos, nw) in enumerate(zip(positions, n_writes)):
+        for j in range(nw):
+            p = pos + j
+            assert np.array_equal(kp2[bt[b, p // P], p % P], one), (b, j)
+    # every touched location is either a valid target or the scratch
+    # page; all other pages/rows are untouched
+    diff = np.argwhere((kp2 != expect).any(axis=(2, 3)))
+    assert diff.size == 0, diff
+
+
+def test_write_spec_clamps_padded_rows_past_block_table():
+    """A slot whose window straddles the end of the table: padding
+    rows' ``pos // P`` may index one past the last block — they must
+    clamp and land in the scratch page, never corrupt live pages."""
+    P, MB, KV, hd = 4, 2, 1, 2
+    kp = jnp.zeros((4, P, KV, hd))
+    bt = jnp.asarray(np.array([[1, 2]], np.int32))
+    # base position 6: rows at 6,7 valid; rows at 8,9 are past the
+    # table (blk 2 > MB-1) AND past n_writes -> scratch
+    kp2, _ = paged.write_spec(kp, kp, jnp.ones((1, 4, KV, hd)),
+                              jnp.ones((1, 4, KV, hd)), bt,
+                              jnp.asarray([6], np.int32),
+                              jnp.asarray([2], np.int32))
+    kp2 = np.asarray(kp2)
+    assert kp2[2, 2:].all() and not kp2[2, :2].any()   # valid rows
+    assert kp2[0].any()                                # padding -> scratch
+    assert not kp2[1].any() and not kp2[3].any()       # live pages clean
+
+
+# ---------------------------------------------------------------------------
+# model level: one verify forward == k+1 sequential decode steps
+# ---------------------------------------------------------------------------
+
+
+def test_verify_rows_bitexact_vs_sequential_decode(served):
+    cfg, params = served
+    rng = np.random.default_rng(0)
+    L, C, P, S_max, K1 = 11, 8, 8, 48, 4
+    prompt = rng.integers(0, cfg.vocab, L).astype(np.int32)
+    spec = paged.spec_for(S_max, 1, page_size=P)
+    caches, _ = lm.init_caches(cfg, 1, S_max, paged=spec)
+    row = np.zeros(spec.max_blocks, np.int32)
+    row[:4] = 1 + np.arange(4)
+    bt_row = jnp.asarray(row)
+    lg = None
+    for ci in range(2):
+        buf = np.zeros(C, np.int32)
+        seg = prompt[ci * C:(ci + 1) * C]
+        buf[: len(seg)] = seg
+        last = (L - 1) - ci * C if ci == 1 else 0
+        lg, caches = lm.prefill_chunk(
+            params, caches, jnp.asarray(buf[None]), jnp.int32(ci * C),
+            bt_row, cfg, last=jnp.int32(last))
+    bt = bt_row[None]
+    toks = [int(np.argmax(lg))]
+    seq_logits, c = [], caches
+    for step in range(K1):
+        lgd, c = lm.decode_step_paged(
+            params, c, jnp.asarray([[toks[-1]]], np.int32),
+            jnp.asarray([L + step], np.int32), bt, cfg)
+        seq_logits.append(np.asarray(lgd[0]))
+        toks.append(int(np.argmax(lgd[0])))
+    # the true continuation as draft: every verify row must reproduce
+    # the corresponding sequential decode step's logits to the bit
+    vt = np.asarray(toks[:K1], np.int32)[None]
+    vlg, _ = lm.verify_step_paged(
+        params, caches, jnp.asarray(vt), jnp.asarray([L], np.int32),
+        jnp.asarray([K1], np.int32), bt, cfg)
+    for j in range(K1):
+        assert np.array_equal(np.asarray(vlg[0, j]), seq_logits[j]), j
+
+
+# ---------------------------------------------------------------------------
+# loop level: bit-exact at every accept rate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("corrupt_p", [0.0, 0.4, 1.0],
+                         ids=["accept-all", "mixed", "reject-all"])
+def test_spec_loop_bitexact_at_accept_rate(served, corrupt_p):
+    cfg, params = served
+    rng = np.random.default_rng(1)
+    reqs = _reqs(cfg, rng, [6, 11, 3, 9], [6, 8, 5, 6])
+    want = _oracle_outputs(params, cfg, reqs)
+    streams = [np.concatenate([p, want[i]]) for i, (p, _) in enumerate(reqs)]
+    drafter = ReplayDrafter(streams, corrupt_p, cfg.vocab, seed=2)
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=48,
+                          page_size=8, chunk=8, spec_k=3, drafter=drafter)
+    for i, (p, mn) in enumerate(reqs):
+        loop.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn))
+    done = {r.rid: r.output for r in loop.run()}
+    for rid in want:
+        assert np.array_equal(done[rid], want[rid]), (corrupt_p, rid)
+    stats = loop.spec_stats()
+    assert stats["spec_steps"] > 0
+    if corrupt_p == 0.0:
+        # perfect drafts: every proposed token accepted, and windows
+        # amortise (strictly more than one token per slot-step)
+        assert stats["accept_rate"] == 1.0
+        assert stats["tokens_per_step"] > 1.5
+    if corrupt_p == 1.0:
+        # every window rejected at row 0 -> pure rollback, still exact
+        assert stats["accepted"] == 0
+        assert stats["tokens_per_step"] == 1.0
+    loop.check_compiled()
+    loop.pages.check()
+    loop.prefix.check()
+
+
+def test_spec_rollback_onto_prefix_cached_pages_bitexact(served):
+    """Identical prompts re-admitted through the radix tree: the slot
+    maps shared pages, admission CoWs the tail block, and then the
+    verify windows (with rollback: drafts are corrupted half the time)
+    write right next to the CoW'd boundary.  Outputs must stay exact
+    and the tree's pages untouched — later requests still hit."""
+    cfg, params = served
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    reqs = [(prompt, 4), (prompt.copy(), 7), (prompt.copy(), 5)]
+    want = _oracle_outputs(params, cfg, reqs)
+    streams = [np.concatenate([prompt, want[0]])]   # same prompt: one
+    streams += [np.concatenate([prompt, want[i]]) for i in (1, 2)]
+    drafter = ReplayDrafter(streams, 0.5, cfg.vocab, seed=4)
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=48,
+                          page_size=8, chunk=8, spec_k=3, drafter=drafter)
+    for i, (p, mn) in enumerate(reqs):
+        loop.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn))
+    done = {r.rid: r.output for r in loop.run()}
+    assert loop.cow_copies >= 2           # later admissions CoW'd
+    assert loop.prefill_tokens_saved > 0  # the tree actually shared
+    for rid in want:
+        assert np.array_equal(done[rid], want[rid]), rid
+    loop.pages.check()
+    loop.prefix.check()
+
+
+def test_spec_eos_mid_window_truncates_like_oracle(served):
+    """An eos landing in the middle of an accepted verify window must
+    cut generation exactly where sequential decode would: tokens after
+    it in the same window are discarded, never emitted."""
+    cfg, params = served
+    rng = np.random.default_rng(8)
+    reqs = _reqs(cfg, rng, [6, 9], [12, 12])
+    # pick the eos from the middle of request 0's un-stopped output so
+    # the stop lands mid-stream (and, with perfect drafts, mid-window)
+    free_run = _oracle_outputs(params, cfg, reqs)
+    eos = int(free_run[0][5])
+    solo = ServeLoop(params, cfg, batch_slots=1, s_max=48, eos_id=eos)
+    want = {}
+    for i, (p, mn) in enumerate(reqs):
+        solo.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn))
+        solo.run()
+    want = {r.rid: r.output for r in solo.done}
+    assert len(want[0]) < len(free_run[0])      # eos actually fired
+    streams = [np.concatenate([p, free_run[i]])
+               for i, (p, _) in enumerate(reqs)]
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=48,
+                          page_size=8, chunk=8, eos_id=eos, spec_k=4,
+                          drafter=ReplayDrafter(streams, 0.0, cfg.vocab))
+    for i, (p, mn) in enumerate(reqs):
+        loop.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn))
+    done = {r.rid: r.output for r in loop.run()}
+    for rid in want:
+        assert np.array_equal(done[rid], want[rid]), rid
+    loop.pages.check()
+
+
+def test_spec_respects_capacity_and_max_new(served):
+    """Draft clamping near S_max / max_new: a prompt one page short of
+    capacity with a huge token budget must produce exactly the dense
+    oracle's capped output — no verify write may spill past the
+    reserved pages."""
+    cfg, params = served
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab, 12).astype(np.int32)
+    want = _oracle_outputs(params, cfg, [(prompt, 50)], s_max=16)
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=16,
+                          page_size=8, chunk=8, spec_k=4)
+    loop.submit(Request(rid=0, prompt=prompt.copy(), max_new_tokens=50))
+    done = loop.run()
+    assert np.array_equal(done[0].output, want[0])
+    loop.pages.check()
+
+
+def test_spec_knobs_flow_from_config(served):
+    cfg, params = served
+    cfg_on = dataclasses.replace(cfg, serve_spec_k=2)
+    loop = PagedServeLoop(params, cfg_on, batch_slots=1, s_max=32,
+                          page_size=8, chunk=8)
+    assert loop.spec_k == 2 and isinstance(loop.drafter, NGramDrafter)
+    assert loop._verify is not None
+    # speculation pins decode attention to the lax oracle: verify has
+    # no impl dispatch, and one output stream must never mix kernels
+    assert loop.cfg.serve_paged_attn_impl == "lax"
+    cfg_none = dataclasses.replace(cfg, serve_spec_k=2,
+                                   serve_spec_drafter="none")
+    loop2 = PagedServeLoop(params, cfg_none, batch_slots=1, s_max=32,
+                           page_size=8, chunk=8)
+    # drafter 'none' fully disarms speculation: no dead verify trace,
+    # and the decode impl is NOT pinned away from the tuned winner
+    assert loop2.drafter is None and loop2._verify is None
+    assert loop2.cfg.serve_paged_attn_impl == cfg.serve_paged_attn_impl
+    loop3 = PagedServeLoop(params, cfg, batch_slots=1, s_max=32,
+                           page_size=8, chunk=8)
+    assert loop3.spec_k == 0 and loop3._verify is None
+    # a custom drafter without spec_k would be silently inert: error
+    with pytest.raises(ValueError, match="speculation is off"):
+        PagedServeLoop(params, cfg, batch_slots=1, s_max=32,
+                       page_size=8, chunk=8, drafter=NGramDrafter())
+    # an explicit conflicting attn impl cannot be silently overridden
+    with pytest.raises(ValueError, match="conflicts with"):
+        PagedServeLoop(params, cfg_on, batch_slots=1, s_max=32,
+                       page_size=8, chunk=8, attn_impl="flash-lax")
+    # ...but an explicit 'lax' (what the pin does anyway) is fine
+    ok = PagedServeLoop(params, cfg_on, batch_slots=1, s_max=32,
+                        page_size=8, chunk=8, attn_impl="lax")
+    assert ok.cfg.serve_paged_attn_impl == "lax"
+
+
+# ---------------------------------------------------------------------------
+# compile-set invariant: three shapes, never a fourth
+# ---------------------------------------------------------------------------
+
+
+def test_three_compiled_shapes_with_spec(served):
+    """The two-shape invariant becomes three with speculation: one
+    chunk prefill, one decode (drafterless steps), one verify window —
+    across mixed lengths, refills, sharing, and clamped drafts.  ANY
+    fourth trace (in any of the three jits, or a second CoW trace)
+    fails."""
+    cfg, params = served
+    rng = np.random.default_rng(5)
+    lengths = [5, 9, 14, 7, 11, 6, 13]
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=64,
+                          page_size=8, chunk=8, spec_k=3)
+    for i, (p, mn) in enumerate(_reqs(cfg, rng, lengths, [6] * 7)):
+        loop.submit(Request(rid=i, prompt=p, max_new_tokens=mn))
+    loop.run()
+    shapes = loop.compiled_shapes()
+    assert shapes == {"chunk": 1, "decode": 1, "verify": 1}, shapes
+    assert loop._copy_page._cache_size() <= 1
+    loop.check_compiled()                 # the reusable invariant hook
+    # spec-off loops still compile exactly two forward shapes
+    off = PagedServeLoop(params, cfg, batch_slots=2, s_max=64,
+                         page_size=8, chunk=8)
+    assert "verify" not in off.compiled_shapes()
+
+
+# ---------------------------------------------------------------------------
+# satellite fix: _finish guards on the construction-time cache setting
+# ---------------------------------------------------------------------------
+
+
+def test_finish_ignores_midflight_prefix_toggle_on(served):
+    """A loop built with ``prefix_cache=False`` must never transfer
+    prompt pages into a tree attached mid-flight: the construction-
+    time setting governs, requests admitted without cache accounting
+    free their pages, and the foreign tree stays empty."""
+    cfg, params = served
+    rng = np.random.default_rng(6)
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=32,
+                          page_size=8, chunk=8, prefix_cache=False)
+    loop.prefix = PrefixCache(8, loop.pages)      # mid-flight toggle
+    loop.submit(Request(rid=0,
+                        prompt=rng.integers(0, cfg.vocab, 16)
+                        .astype(np.int32), max_new_tokens=3))
+    loop.run()
+    assert loop.prefix.n_nodes == 0               # no transfer happened
+    assert loop.pages.in_use == 0                 # pages freed, not kept
+    loop.pages.check()
+
+
+def test_finish_survives_midflight_prefix_toggle_off(served):
+    """The reverse toggle (cache on at construction, attribute nulled
+    mid-flight) must not leak or double-free: without a tree to
+    transfer into, _finish releases every page."""
+    cfg, params = served
+    rng = np.random.default_rng(6)
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=32,
+                          page_size=8, chunk=8, prefix_cache=True)
+    loop.prefix = None                            # mid-flight toggle
+    loop.submit(Request(rid=0,
+                        prompt=rng.integers(0, cfg.vocab, 16)
+                        .astype(np.int32), max_new_tokens=3))
+    loop.run()
+    assert loop.pages.in_use == 0
+    loop.pages.check()
+
+
+# ---------------------------------------------------------------------------
+# property fuzz: rollback churn never corrupts page accounting
+# ---------------------------------------------------------------------------
+
+
+_FUZZ: dict = {}
+
+
+def _fuzz_fixture():
+    """Built once: a prompt pool and its oracle outputs (codeqwen)."""
+    if _FUZZ:
+        return _FUZZ
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    rng = np.random.default_rng(9)
+    reqs = _reqs(cfg, rng, [6, 16, 9, 12], [6, 7, 5, 6])
+    want = _oracle_outputs(params, cfg, reqs)
+    _FUZZ.update(cfg=cfg, params=params, reqs=reqs, want=want,
+                 streams=[np.concatenate([p, want[i]])
+                          for i, (p, _) in enumerate(reqs)])
+    return _FUZZ
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_spec_rollback_property_invariants(seed):
+    """Random accept/reject sequences (random draft corruption, random
+    workload order, random spec_k, pool pressure forcing eviction)
+    must leave the page accounting perfect: ``PageManager.check()``
+    and ``PrefixCache.check()`` green at finish, refcounts partitioning
+    exactly (tree-held pages are the only survivors; evicting the tree
+    drains the pool to zero), and outputs still bit-exact."""
+    fx = _fuzz_fixture()
+    cfg, params = fx["cfg"], fx["params"]
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(fx["reqs"]))
+    drafter = ReplayDrafter(fx["streams"], float(rng.uniform(0, 1)),
+                            cfg.vocab, seed=seed)
+    # 11 usable pages < worst-case for the workload: admissions run
+    # the tree through lock/evict/fallback paths under churn
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=32,
+                          page_size=8, chunk=8, n_pages=12,
+                          spec_k=int(rng.integers(1, 5)), drafter=drafter)
+    for i in order:
+        p, mn = fx["reqs"][i]
+        loop.submit(Request(rid=int(i), prompt=p.copy(),
+                            max_new_tokens=mn))
+    done = {r.rid: r.output for r in loop.run()}
+    for rid, out in done.items():
+        assert np.array_equal(out, fx["want"][rid]), (seed, rid)
+    loop.pages.check()
+    loop.prefix.check()
+    loop.check_compiled()
+    # every surviving reference is the tree's own: draining it frees
+    # the whole pool (no leaked page, no double-free en route)
+    loop.prefix.evict(10 ** 6)
+    loop.pages.check()
+    assert loop.pages.in_use == 0
