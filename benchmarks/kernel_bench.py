@@ -38,6 +38,7 @@ IMPLS = ("auto", "xla", "xla-kscan", "xla-flat", "pallas", "fused")
 
 
 def run(quiet=False, json_path=None):
+    autotune.reset_stats()   # counters below reflect THIS run only
     rng = np.random.default_rng(0)
     B_w, B_a, G = BENCH_SHAPE["B_w"], BENCH_SHAPE["B_a"], BENCH_SHAPE["G"]
     K, N = BENCH_SHAPE["K"], BENCH_SHAPE["N"]
@@ -108,6 +109,11 @@ def run(quiet=False, json_path=None):
             # and machine-local paths would churn it per contributor
             "autotune_cache_overridden": bool(os.environ.get(
                 autotune.CACHE_ENV)),
+            # WHICH keys this run re-tuned (vs served from the cache):
+            # "overridden: true" alone left CI artifacts undiagnosable —
+            # a cold cache re-sweeps every shape, a restored one should
+            # show zero tuned_keys and pure hits
+            "autotune": autotune.snapshot_stats(),
         }
         with open(json_path, "w") as f:
             json.dump(doc, f, indent=1, sort_keys=True)

@@ -3,6 +3,7 @@
     PYTHONPATH=src python examples/serve_decode.py --arch xlstm-350m
     PYTHONPATH=src python examples/serve_decode.py --shared-prefix
     PYTHONPATH=src python examples/serve_decode.py --spec-k 4
+    PYTHONPATH=src python examples/serve_decode.py --kv-dtype int8
 
 Runs the slot-based serving loop (prefill + greedy decode) with each
 serve impl and reports tokens/s (CPU wall time is illustrative; the
@@ -64,8 +65,16 @@ def main():
                          "tokens per slot (n-gram drafter) and verify "
                          "them in one batched forward (needs a gqa "
                          "arch; 0 = off)")
+    ap.add_argument("--kv-dtype", default="fp",
+                    choices=("fp", "int8", "int4"),
+                    help="paged KV pool dtype (cfg.serve_kv_dtype): "
+                         "int8/int4 store quantised codes + per-page-"
+                         "slot scales and dequantise inside the "
+                         "attention kernels — ~2x/~4x less KV traffic "
+                         "and pool bytes (needs a gqa arch)")
     args = ap.parse_args()
-    if (args.shared_prefix or args.spec_k) and args.arch == "xlstm-350m":
+    if ((args.shared_prefix or args.spec_k or args.kv_dtype != "fp")
+            and args.arch == "xlstm-350m"):
         args.arch = "codeqwen1.5-7b"      # needs a paged-capable family
 
     for impl in ("dense", "int8", "tlmac"):
@@ -76,7 +85,8 @@ def main():
             loop = PagedServeLoop(params, cfg, batch_slots=3, s_max=64,
                                   page_size=8, chunk=8,
                                   prefix_cache=not args.no_prefix_cache,
-                                  spec_k=args.spec_k)
+                                  spec_k=args.spec_k,
+                                  kv_dtype=args.kv_dtype)
         else:
             loop = ServeLoop(params, cfg, batch_slots=3, s_max=64)
         rng = np.random.default_rng(0)
@@ -103,6 +113,9 @@ def main():
                   f"accept_rate={s['accept_rate']:.2f} "
                   f"verify_steps={s['spec_steps']} "
                   f"decode_steps={s['decode_steps']}")
+        if paged and args.kv_dtype != "fp":
+            print(f"        kv quant: dtype={loop.kv_spec.dtype} "
+                  f"pool_bytes={loop.kv_pool_bytes()}")
 
 
 if __name__ == "__main__":

@@ -87,6 +87,19 @@ class ArchConfig:
                                  # (kernels/paged.py): auto (shape-keyed
                                  # autotune; lax on a cache miss), lax,
                                  # flash-lax, or flash (Pallas split-K)
+    serve_kv_dtype: str = "fp"   # serve-path KV cache dtype
+                                 # (kernels/paged.KVQuantSpec): fp (bf16,
+                                 # byte-for-byte the historical layout),
+                                 # int8, or int4 (packed two codes per
+                                 # byte).  Quantised pools store absmax
+                                 # scales per (page slot, kv head) next
+                                 # to the codes and dequantise inside
+                                 # the attention readers — ~2x / ~4x
+                                 # less KV traffic and pool bytes.  The
+                                 # dense oracle loop applies the same
+                                 # quantise->dequantise round-trip to
+                                 # its cache, so paged-vs-dense stays
+                                 # bit-identical at equal quantisation.
     serve_prefix_cache: bool = True  # radix-tree prefix cache over the
                                  # paged KV pool (serve/prefix_cache.py):
                                  # finished prompts' pages are kept,

@@ -58,6 +58,29 @@ _cache_file: Optional[str] = None
 # memoise resolved configs and re-resolve only when the cache changed
 generation: int = 0
 
+# process-local observability: which keys hit/missed the cache and which
+# were (re-)tuned this process.  The benches emit these into their JSON
+# artifacts so a CI bench run is diagnosable after the fact — "the cache
+# was overridden" alone says nothing about WHAT was re-tuned.
+_stats_lock = threading.Lock()
+stats: Dict[str, Any] = {"lookup_hits": 0, "lookup_misses": 0,
+                         "tuned_keys": []}
+
+
+def reset_stats() -> None:
+    with _stats_lock:
+        stats["lookup_hits"] = 0
+        stats["lookup_misses"] = 0
+        stats["tuned_keys"] = []
+
+
+def snapshot_stats() -> Dict[str, Any]:
+    """Copy of the process-local lookup/tune counters (bench artifacts)."""
+    with _stats_lock:
+        return {"lookup_hits": stats["lookup_hits"],
+                "lookup_misses": stats["lookup_misses"],
+                "tuned_keys": list(stats["tuned_keys"])}
+
 
 # ---------------------------------------------------------------------------
 # cache persistence
@@ -186,6 +209,8 @@ def candidates(M: int, K: int, N: int, *, B_a: int, G: int,
 def lookup(key: str) -> Optional[Dict[str, Any]]:
     """Winning config for a shape key, or None.  Trace-safe."""
     entry = _load().get(key)
+    with _stats_lock:
+        stats["lookup_hits" if entry else "lookup_misses"] += 1
     return dict(entry["config"]) if entry else None
 
 
@@ -198,6 +223,9 @@ def record(key: str, config: Dict[str, Any], us: float,
                      "baseline_us": baseline_us or {}}
         generation += 1
         _save()
+    with _stats_lock:
+        if key not in stats["tuned_keys"]:
+            stats["tuned_keys"].append(key)
 
 
 def _time(fn, reps: int) -> float:
@@ -325,11 +353,16 @@ ATTN_DEFAULT_IMPL = "lax"
 
 
 def attn_shape_key(B: int, KV: int, rep: int, hd: int, MB: int, P: int,
-                   window=None) -> str:
+                   window=None, kv_dtype: str = "fp") -> str:
     backend = jax.default_backend()
     w = "none" if window is None else int(window)
+    # quantised pools get their own keys (an int8 winner must never
+    # serve an fp shape); fp keys stay byte-identical to the historical
+    # format so existing caches — and the CI actions/cache entries —
+    # survive this schema extension
+    q = "" if kv_dtype == "fp" else f",q{kv_dtype}"
     return (f"{_SCHEMA}|{backend}|attn|B{B},KV{KV},rep{rep},hd{hd},"
-            f"MB{MB},P{P},W{w}")
+            f"MB{MB},P{P},W{w}{q}")
 
 
 def attention_candidates(
@@ -360,6 +393,9 @@ def tune_attention(
     reps: int = 5,
     cands: Optional[List[Dict[str, Any]]] = None,
     verify: bool = True,
+    k_scales=None,
+    v_scales=None,
+    qspec=None,
 ) -> Dict[str, Any]:
     """Verify-then-time tuning for paged decode attention.
 
@@ -369,19 +405,23 @@ def tune_attention(
     reduction — candidates are verified against the ``lax`` oracle to a
     tolerance far below anything that could flip a greedy argmax, then
     timed.  The winner persists under an ``attn|`` shape key in the
-    same JSON cache."""
+    same JSON cache.  Quantised pools (``qspec``, with their
+    ``k_scales``/``v_scales`` sidecars) tune under their own kv-dtype
+    key, each candidate verified against the *dequantising* lax oracle."""
     from repro.kernels import paged
 
+    qspec = qspec or paged.KVQuantSpec()
     B, _, H, hd = q.shape
     KV = k_pages.shape[2]
     key = attn_shape_key(B, KV, H // KV, hd, block_table.shape[1],
-                         k_pages.shape[1], window)
+                         k_pages.shape[1], window, kv_dtype=qspec.dtype)
     if cands is None:
         cands = attention_candidates()
     want = (
         np.asarray(paged.dispatch_attention(
             {"impl": "lax"}, q, k_pages, v_pages, block_table, positions,
-            window=window), np.float32)
+            window=window, k_scales=k_scales, v_scales=v_scales,
+            qspec=qspec), np.float32)
         if verify else None
     )
     best_cfg, best_us = None, float("inf")
@@ -394,7 +434,8 @@ def tune_attention(
         jitted = jax.jit(
             lambda q_, k_, v_, bt_, pos_, cand=cand:
             paged.dispatch_attention(cand, q_, k_, v_, bt_, pos_,
-                                     window=window)
+                                     window=window, k_scales=k_scales,
+                                     v_scales=v_scales, qspec=qspec)
         )
 
         def run(jitted=jitted):

@@ -22,6 +22,15 @@ the pool's scratch page — and skip their compute under ``pl.when``;
 since consecutive revisits of the same block index skip the copy, the
 wasted traffic is one scratch page, not O(S_max).
 
+Quantised pools (``kv_dtype`` int8/int4): the code pages stream in as
+int8 blocks and their per-(page slot, head) absmax scales ride as
+``[1, P, 1]`` blocks whose index map follows the SAME block-table
+lookup as the codes — the scale DMA is paged exactly like the data it
+scales.  Dequant happens in-register per visit (int4 unpacks with
+shift pairs before the MXU contraction), so the HBM traffic per token
+is the code page plus a P-element scale vector — 2x (int8) / ~4x
+(int4) less than the bf16 pool.
+
 Numerics: fully-masked visits never poison the running max because
 masked probabilities are zeroed explicitly (``where(mask, exp, 0)``)
 rather than trusting ``exp(NEG_INF - m)`` to underflow.
@@ -38,26 +47,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# pure-jnp nibble decode, shared with the lax readers so the packing
+# convention has exactly one implementation (no import cycle: paged.py
+# only imports this module lazily inside dispatch_attention)
+from repro.kernels.paged import unpack_int4
+
 NEG_INF = -1e30
 
 
 def _kernel(
     bt_ref,       # [B, MB] int32   scalar prefetch: block table
     len_ref,      # [B]     int32   scalar prefetch: per-slot lengths
-    q_ref,        # [1, 1, rep, hd]
-    k_ref,        # [1, P, 1, hd]   one page, one kv head
-    v_ref,        # [1, P, 1, hd]
-    o_ref,        # [1, 1, 1, rep, hd] f32 partial
-    m_ref,        # [1, 1, 1, rep, hd] f32 running max (lane-broadcast)
-    l_ref,        # [1, 1, 1, rep, hd] f32 running denom
-    acc_s,        # VMEM scratch [rep, hd] f32
-    m_s,          # VMEM scratch [rep, hd] f32
-    l_s,          # VMEM scratch [rep, hd] f32
-    *,
+    *refs,
     P: int,
     bps: int,
     window: Optional[int],
+    kv_dtype: str,
 ):
+    if kv_dtype == "fp":
+        (q_ref, k_ref, v_ref,
+         o_ref, m_ref, l_ref, acc_s, m_s, l_s) = refs
+        ks_ref = vs_ref = None
+    else:
+        (q_ref, k_ref, v_ref, ks_ref, vs_ref,
+         o_ref, m_ref, l_ref, acc_s, m_s, l_s) = refs
     b = pl.program_id(0)
     s = pl.program_id(2)
     i = pl.program_id(3)
@@ -74,8 +87,19 @@ def _kernel(
     @pl.when(blk * P < L)
     def _visit():
         q = q_ref[0, 0].astype(jnp.float32)              # [rep, hd]
-        k = k_ref[0, :, 0, :].astype(jnp.float32)        # [P, hd]
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if kv_dtype == "fp":
+            k = k_ref[0, :, 0, :].astype(jnp.float32)    # [P, hd]
+            v = v_ref[0, :, 0, :].astype(jnp.float32)
+        else:
+            kc = k_ref[0, :, 0, :]                       # [P, hd or hd/2]
+            vc = v_ref[0, :, 0, :]
+            if kv_dtype == "int4":
+                kc, vc = unpack_int4(kc), unpack_int4(vc)
+            kc = kc.astype(jnp.float32)
+            vc = vc.astype(jnp.float32)
+            # dequant in-register: codes x per-page-slot scale
+            k = kc * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+            v = vc * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
         scale = 1.0 / math.sqrt(hd)
         scores = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
@@ -107,11 +131,12 @@ def _kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("window", "n_splits", "interpret")
+    jax.jit,
+    static_argnames=("window", "n_splits", "interpret", "kv_dtype"),
 )
 def flash_decode(
     q: jnp.ndarray,            # [B, KV, rep, hd]
-    k_pages: jnp.ndarray,      # [n_pages, P, KV, hd]
+    k_pages: jnp.ndarray,      # [n_pages, P, KV, hd | hd/2 codes]
     v_pages: jnp.ndarray,
     block_table: jnp.ndarray,  # [B, MB] int32
     lengths: jnp.ndarray,      # [B] int32 (valid tokens = pos + 1)
@@ -119,13 +144,18 @@ def flash_decode(
     window: Optional[int] = None,
     n_splits: int = 4,
     interpret: bool = False,
+    k_scales: Optional[jnp.ndarray] = None,   # [n_pages, P, KV]
+    v_scales: Optional[jnp.ndarray] = None,
+    kv_dtype: str = "fp",
 ) -> jnp.ndarray:
     """Split-K paged flash decode; returns ``[B, KV, rep, hd]`` f32."""
     B, KV, rep, hd = q.shape
-    _, P, _, _ = k_pages.shape
+    _, P, _, hdc = k_pages.shape
     MB = block_table.shape[1]
     n_splits = max(1, min(n_splits, MB))
     bps = -(-MB // n_splits)   # blocks per split
+    if kv_dtype != "fp" and (k_scales is None or v_scales is None):
+        raise ValueError(f"kv_dtype {kv_dtype!r} needs k_scales/v_scales")
 
     bt = block_table.astype(jnp.int32)
     lens = lengths.astype(jnp.int32)
@@ -136,14 +166,28 @@ def flash_decode(
         pid = jnp.where(valid, bt_ref[b, jnp.minimum(blk, MB - 1)], 0)
         return (pid, 0, g, 0)
 
+    def scale_index(b, g, s, i, bt_ref, len_ref):
+        # the scale sidecar pages through the block table exactly like
+        # its codes (same page id, one [P] vector per (page, head))
+        return kv_index(b, g, s, i, bt_ref, len_ref)[:3]
+
+    in_specs = [
+        pl.BlockSpec((1, 1, rep, hd), lambda b, g, s, i, *_: (b, g, 0, 0)),
+        pl.BlockSpec((1, P, 1, hdc), kv_index),
+        pl.BlockSpec((1, P, 1, hdc), kv_index),
+    ]
+    operands = [q, k_pages, v_pages]
+    if kv_dtype != "fp":
+        in_specs += [
+            pl.BlockSpec((1, P, 1), scale_index),
+            pl.BlockSpec((1, P, 1), scale_index),
+        ]
+        operands += [k_scales, v_scales]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, n_splits, bps),
-        in_specs=[
-            pl.BlockSpec((1, 1, rep, hd), lambda b, g, s, i, *_: (b, g, 0, 0)),
-            pl.BlockSpec((1, P, 1, hd), kv_index),
-            pl.BlockSpec((1, P, 1, hd), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1, 1, rep, hd),
                          lambda b, g, s, i, *_: (b, g, s, 0, 0)),
@@ -160,11 +204,12 @@ def flash_decode(
     )
     part = jax.ShapeDtypeStruct((B, KV, n_splits, rep, hd), jnp.float32)
     o_p, m_p, l_p = pl.pallas_call(
-        functools.partial(_kernel, P=P, bps=bps, window=window),
+        functools.partial(_kernel, P=P, bps=bps, window=window,
+                          kv_dtype=kv_dtype),
         grid_spec=grid_spec,
         out_shape=[part, part, part],
         interpret=interpret,
-    )(bt, lens, q, k_pages, v_pages)
+    )(bt, lens, *operands)
 
     # combine split partials (FlashDecoding reduction); empty splits
     # carry (acc=0, m=NEG_INF, l=0) and contribute exact zeros

@@ -38,6 +38,32 @@ path pays is gone.
                  are verified against the ``lax`` oracle, then timed;
                  trace-time lookups are pure host-side cache reads and
                  fall back to ``lax`` on a miss.
+
+**Quantised pools** (``KVQuantSpec``): the pool is dtype-polymorphic —
+``fp`` (bf16, the historical layout, byte-for-byte unchanged), ``int8``
+(one code byte per element) or ``int4`` (two codes packed per byte).
+Quantised pools carry absmax scales *alongside the codes*, stored
+page-structured as ``[n_pages, page_size, KV]`` — one scale per page
+slot (token) per kv head, over the head dim.  Scales are per page slot,
+NOT one scalar per whole page, deliberately: a whole-page scale would
+have to be rescaled as later tokens land in the page, making the page's
+codes a function of write *history* (chunk boundaries, decode order) —
+which would break both the prefix cache's content-addressing (a cached
+page must be a pure function of its token content) and the equal-
+quantisation oracle discipline (the dense reference would have to
+replay the paged write schedule).  Per-slot scales keep quantise ∘
+write a pure per-token function, so paged-vs-dense stays bit-identical
+at equal quantisation exactly the way the fp path is today, and every
+composition (CoW, prefix sharing, speculative rollback) inherits it.
+
+Quantisation happens on write (post-rotary K, raw V), dequantisation
+inside each attention reader: the lax oracle dequantises its gather,
+``flash-lax`` dequantises per visited page inside the online-softmax
+loop, and the Pallas kernel loads code pages + their scale blocks
+through the same block-table indexing and dequantises in-register
+(int4 unpacks with shifts).  KV read/write traffic and pool bytes drop
+~2x (int8) / ~4x (int4) relative to bf16; the scale sidecar costs
+``2 / head_dim`` bytes per element (bf16 scales).
 """
 
 from __future__ import annotations
@@ -50,6 +76,8 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30  # matches models/attention.NEG_INF (bit-exact masking)
+
+SCALE_DTYPE = jnp.bfloat16   # scale sidecar dtype (2 bytes / page slot / head)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,26 +112,178 @@ def spec_for(S_max: int, batch_slots: int, page_size: int = 16,
 
 
 # ---------------------------------------------------------------------------
+# KV quantisation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """Quantised paged-KV layout (hashable: usable as a jit-static arg).
+
+    ``dtype``:
+      fp    bf16 pool, no scales — the historical layout, unchanged.
+      int8  one int8 code per element, absmax scale per (page slot,
+            kv head) over the head dim.
+      int4  two codes packed per int8 byte (low nibble = even element),
+            same scale layout; codes clip to [-7, 7].
+    """
+
+    dtype: str = "fp"
+
+    def __post_init__(self):
+        if self.dtype not in ("fp", "int8", "int4"):
+            raise ValueError(
+                f"serve_kv_dtype must be fp | int8 | int4, got {self.dtype!r}"
+            )
+
+    @property
+    def quantised(self) -> bool:
+        return self.dtype != "fp"
+
+    @property
+    def qmax(self) -> int:
+        return {"int8": 127, "int4": 7}[self.dtype]
+
+    @property
+    def packed(self) -> bool:
+        return self.dtype == "int4"
+
+    def code_width(self, hd: int) -> int:
+        """Last-axis width of the code array for head dim ``hd``."""
+        if self.packed:
+            if hd % 2:
+                raise ValueError(f"int4 packing needs an even head dim, "
+                                 f"got {hd}")
+            return hd // 2
+        return hd
+
+
+def qspec_for(cfg) -> KVQuantSpec:
+    """The serve-path KV quantisation spec a config asks for."""
+    return KVQuantSpec(getattr(cfg, "serve_kv_dtype", "fp"))
+
+
+def pack_int4(codes):
+    """Pack int8 codes in [-8, 7] two-per-byte (low nibble = even
+    element of the last axis)."""
+    if codes.shape[-1] % 2:
+        raise ValueError(f"int4 packing needs an even head dim, "
+                         f"got {codes.shape[-1]}")
+    lo = codes[..., 0::2]
+    hi = codes[..., 1::2]
+    return ((lo & 0x0F) | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed):
+    """Inverse of ``pack_int4``: int8 ``[..., w]`` -> ``[..., 2w]``
+    sign-extended codes.  Lossless for codes in [-8, 7]."""
+    p = packed.astype(jnp.int32)
+    lo = (p << 28) >> 28
+    hi = (p << 24) >> 28
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], 2 * packed.shape[-1]).astype(
+        jnp.int8)
+
+
+def quantise_kv(x, qspec: KVQuantSpec):
+    """Per-token symmetric absmax quantisation over the head dim.
+
+    ``x [..., hd]`` float -> ``(codes [..., code_width], scales [...])``.
+    The scale is a pure function of the one vector it quantises (no
+    page history), computed in f32 and stored in ``SCALE_DTYPE``; codes
+    round half-to-even and clip to ±qmax.  An all-zero vector gets
+    scale 1 (codes 0), never a 0/0."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / qspec.qmax, 1.0).astype(SCALE_DTYPE)
+    codes = jnp.clip(
+        jnp.round(xf / scale.astype(jnp.float32)[..., None]),
+        -qspec.qmax, qspec.qmax,
+    ).astype(jnp.int8)
+    if qspec.packed:
+        codes = pack_int4(codes)
+    return codes, scale
+
+
+def dequantise_kv(codes, scales, qspec: KVQuantSpec):
+    """``codes [..., code_width]`` + ``scales [...]`` -> f32 ``[..., hd]``.
+    The exact read-path product (f32 code x f32-cast scale) every
+    reader — and the equal-quantisation dense oracle — must share."""
+    if qspec.packed:
+        codes = unpack_int4(codes)
+    return codes.astype(jnp.float32) * scales.astype(jnp.float32)[..., None]
+
+
+def kv_roundtrip(x, qspec: KVQuantSpec):
+    """quantise -> dequantise.  The dense oracle applies this to its
+    cache writes so paged-vs-dense stays bit-identical at equal
+    quantisation (both paths then attend over the same f32 values)."""
+    codes, scales = quantise_kv(x, qspec)
+    return dequantise_kv(codes, scales, qspec)
+
+
+def zero_kv_pool(spec: PageSpec, KV: int, hd: int,
+                 qspec: Optional[KVQuantSpec] = None) -> dict:
+    """Zeroed paged pool for one attention layer.  fp keeps the
+    historical two-leaf layout; quantised pools add the scale sidecars
+    (``ks``/``vs``, ones: zero codes x 1.0 = exact zeros)."""
+    qspec = qspec or KVQuantSpec()
+    if not qspec.quantised:
+        z = jnp.zeros((spec.n_pages, spec.page_size, KV, hd), jnp.bfloat16)
+        return {"k": z, "v": z}
+    z = jnp.zeros((spec.n_pages, spec.page_size, KV, qspec.code_width(hd)),
+                  jnp.int8)
+    s = jnp.ones((spec.n_pages, spec.page_size, KV), SCALE_DTYPE)
+    return {"k": z, "v": z, "ks": s, "vs": s}
+
+
+# ---------------------------------------------------------------------------
 # page writes / reads
 # ---------------------------------------------------------------------------
 
 
-def write_decode(k_pages, v_pages, k, v, block_table, positions):
-    """Write one decode token per slot.
+def _write_kv(kv: dict, pid, off, k, v, qspec: Optional[KVQuantSpec]):
+    """Shared scatter for every write path: quantise-on-write when the
+    pool is quantised (codes AND scales land at the same ``[pid, off]``
+    page slots), plain dtype-cast stores for fp."""
+    qspec = qspec or KVQuantSpec()
+    if not qspec.quantised:
+        return dict(kv,
+                    k=kv["k"].at[pid, off].set(k.astype(kv["k"].dtype)),
+                    v=kv["v"].at[pid, off].set(v.astype(kv["v"].dtype)))
+    kq, ks = quantise_kv(k, qspec)
+    vq, vs = quantise_kv(v, qspec)
+    return dict(kv,
+                k=kv["k"].at[pid, off].set(kq),
+                v=kv["v"].at[pid, off].set(vq),
+                ks=kv["ks"].at[pid, off].set(ks),
+                vs=kv["vs"].at[pid, off].set(vs))
+
+
+def write_decode_kv(kv: dict, k, v, block_table, positions,
+                    qspec: Optional[KVQuantSpec] = None) -> dict:
+    """Write one decode token per slot into a (possibly quantised) pool.
 
     k/v ``[B, 1, KV, hd]``; ``positions [B]`` is each slot's write
     position (== its current length).  Idle slots' block-table rows are
     all zeros, so their writes land in the scratch page."""
-    P = k_pages.shape[1]
+    P = kv["k"].shape[1]
     blk = positions // P
     pid = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
     off = positions % P
-    kp = k_pages.at[pid, off].set(k[:, 0].astype(k_pages.dtype))
-    vp = v_pages.at[pid, off].set(v[:, 0].astype(v_pages.dtype))
-    return kp, vp
+    return _write_kv(kv, pid, off, k[:, 0], v[:, 0], qspec)
 
 
-def write_chunk(k_pages, v_pages, k, v, block_table_row, start):
+def write_decode(k_pages, v_pages, k, v, block_table, positions):
+    """Array-level fp form of ``write_decode_kv`` (kept for callers
+    that carry the two pool leaves positionally)."""
+    kv = write_decode_kv({"k": k_pages, "v": v_pages}, k, v, block_table,
+                         positions)
+    return kv["k"], kv["v"]
+
+
+def write_chunk_kv(kv: dict, k, v, block_table_row, start,
+                   qspec: Optional[KVQuantSpec] = None) -> dict:
     """Write one fixed-size prefill chunk into a slot's pages.
 
     k/v ``[1, C, KV, hd]``; ``block_table_row [max_blocks]``; ``start``
@@ -111,18 +291,26 @@ def write_chunk(k_pages, v_pages, k, v, block_table_row, start):
     last chunk writes garbage *within the slot's own allocated pages*
     (admission allocates up to the padded chunk length); those
     positions sit beyond ``len`` so every read masks them, and decode
-    overwrites each one before it becomes visible."""
+    overwrites each one before it becomes visible.  Quantised pools
+    quantise each garbage row with its own scale, so a padding row can
+    never perturb a valid row's codes."""
     C = k.shape[1]
-    P = k_pages.shape[1]
+    P = kv["k"].shape[1]
     pos = start + jnp.arange(C)
     pid = block_table_row[pos // P]
     off = pos % P
-    kp = k_pages.at[pid, off].set(k[0].astype(k_pages.dtype))
-    vp = v_pages.at[pid, off].set(v[0].astype(v_pages.dtype))
-    return kp, vp
+    return _write_kv(kv, pid, off, k[0], v[0], qspec)
 
 
-def write_spec(k_pages, v_pages, k, v, block_table, positions, n_writes):
+def write_chunk(k_pages, v_pages, k, v, block_table_row, start):
+    """Array-level fp form of ``write_chunk_kv``."""
+    kv = write_chunk_kv({"k": k_pages, "v": v_pages}, k, v,
+                        block_table_row, start)
+    return kv["k"], kv["v"]
+
+
+def write_spec_kv(kv: dict, k, v, block_table, positions, n_writes,
+                  qspec: Optional[KVQuantSpec] = None) -> dict:
     """Write a fixed-width speculative verify window per slot.
 
     k/v ``[B, K1, KV, hd]`` — token row ``j`` of slot ``b`` lands at
@@ -133,23 +321,39 @@ def write_spec(k_pages, v_pages, k, v, block_table, positions, n_writes):
     exactly like an idle slot's decode write — so a slot drafting
     fewer than ``K1 - 1`` tokens (draft clamped near ``max_new`` /
     capacity, or an n-gram miss) can share the one compiled verify
-    shape without its padding ever touching live pages.
+    shape without its padding ever touching live pages.  Quantised
+    pools route the padding rows' scales to the scratch page the same
+    way.
 
-    Valid rows index the block table like ``write_decode``; the block
-    index is clamped into table range before the gather because padded
-    rows of a slot near capacity may compute ``pos // P`` one past the
-    last block (their page id is overridden to scratch anyway)."""
+    Valid rows index the block table like ``write_decode_kv``; the
+    block index is clamped into table range before the gather because
+    padded rows of a slot near capacity may compute ``pos // P`` one
+    past the last block (their page id is overridden to scratch
+    anyway)."""
     K1 = k.shape[1]
-    P = k_pages.shape[1]
+    P = kv["k"].shape[1]
     pos = positions[:, None] + jnp.arange(K1)[None, :]       # [B, K1]
     blk = jnp.minimum(pos // P, block_table.shape[1] - 1)
     pid = jnp.take_along_axis(block_table, blk, axis=1)      # [B, K1]
     valid = jnp.arange(K1)[None, :] < n_writes[:, None]
     pid = jnp.where(valid, pid, 0)                           # pad -> scratch
     off = pos % P
-    kp = k_pages.at[pid, off].set(k.astype(k_pages.dtype))
-    vp = v_pages.at[pid, off].set(v.astype(v_pages.dtype))
-    return kp, vp
+    return _write_kv(kv, pid, off, k, v, qspec)
+
+
+def write_spec(k_pages, v_pages, k, v, block_table, positions, n_writes):
+    """Array-level fp form of ``write_spec_kv``."""
+    kv = write_spec_kv({"k": k_pages, "v": v_pages}, k, v, block_table,
+                       positions, n_writes)
+    return kv["k"], kv["v"]
+
+
+def copy_page_kv(kv: dict, src, dst) -> dict:
+    """Copy-on-write: duplicate physical page ``src`` into ``dst``
+    across every leaf of one layer's pool — codes AND scale sidecars
+    (a CoW'd quantised page must dequantise identically to its
+    source, so the scales travel with the codes)."""
+    return {name: leaf.at[dst].set(leaf[src]) for name, leaf in kv.items()}
 
 
 def copy_page(k_pages, v_pages, src, dst):
@@ -162,7 +366,9 @@ def copy_page(k_pages, v_pages, src, dst):
     block-table entry, so a cached page's content is immutable while
     referenced.  ``src``/``dst`` are traced scalars — one compile
     covers every CoW.  Stacked-layer caches go through
-    ``models/lm.cache_copy_page``, which maps this over the tree."""
+    ``models/lm.cache_copy_page``, which maps this over the tree (and,
+    because it maps over every leaf, copies quantised pools' scale
+    sidecars for free)."""
     return (k_pages.at[dst].set(k_pages[src]),
             v_pages.at[dst].set(v_pages[src]))
 
@@ -183,20 +389,39 @@ def gather_kv(k_pages, v_pages, block_table):
     return kc, vc
 
 
+def gather_kv_deq(kv: dict, block_table, qspec: Optional[KVQuantSpec] = None):
+    """``gather_kv`` over a (possibly quantised) pool dict.
+
+    fp pools return the bf16 pages untouched (byte-identical to the
+    historical path); quantised pools gather the code pages + scale
+    sidecars and dequantise to the f32 values every reader shares."""
+    qspec = qspec or KVQuantSpec()
+    if not qspec.quantised:
+        return gather_kv(kv["k"], kv["v"], block_table)
+    B, MB = block_table.shape
+    _, P, KV, _ = kv["k"].shape
+    kc = dequantise_kv(kv["k"][block_table], kv["ks"][block_table], qspec)
+    vc = dequantise_kv(kv["v"][block_table], kv["vs"][block_table], qspec)
+    return (kc.reshape(B, MB * P, KV, -1), vc.reshape(B, MB * P, KV, -1))
+
+
 # ---------------------------------------------------------------------------
 # attention impls
 # ---------------------------------------------------------------------------
 
 
-def _attend_lax(q, k_pages, v_pages, block_table, positions,
-                window: Optional[int]):
+def _attend_lax(q, kv, block_table, positions, window: Optional[int],
+                qspec: Optional[KVQuantSpec]):
     """Gather + masked softmax — the same contraction/mask sequence as
     models/attention._sdpa_direct, so it is bit-exact with the dense
-    decode path (masked keys contribute exact zeros)."""
+    decode path (masked keys contribute exact zeros).  Quantised pools
+    dequantise the gathered codes to the same f32 values the quantised
+    dense oracle stores, so the bit-exactness contract survives
+    quantisation unchanged."""
     B, Sq, H, dk = q.shape
-    KV = k_pages.shape[2]
+    KV = kv["k"].shape[2]
     rep = H // KV
-    kc, vc = gather_kv(k_pages, v_pages, block_table)
+    kc, vc = gather_kv_deq(kv, block_table, qspec)
     S = kc.shape[1]
     j = jnp.arange(S)[None, :]
     mask = j <= positions[:, None]
@@ -215,14 +440,20 @@ def _attend_lax(q, k_pages, v_pages, block_table, positions,
     return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H * dv).astype(q.dtype)
 
 
-def _attend_flash_lax(q, k_pages, v_pages, block_table, positions,
-                      window: Optional[int]):
+def _attend_flash_lax(q, kv, block_table, positions, window: Optional[int],
+                      qspec: Optional[KVQuantSpec]):
     """FlashDecoding in pure lax: online softmax over page blocks with a
     dynamic trip count — work is O(longest live context), never
     O(s_alloc).  Fully-masked blocks are handled by zeroing masked
-    probabilities (not by trusting the running max)."""
+    probabilities (not by trusting the running max).  Quantised pools
+    dequantise per visited page INSIDE the loop: the HBM traffic per
+    token is the code page (+ its scale sidecar), never a dequantised
+    fp copy of the context."""
+    qspec = qspec or KVQuantSpec()
     B, Sq, H, dk = q.shape
-    _, P, KV, hd = k_pages.shape
+    k_pages, v_pages = kv["k"], kv["v"]
+    _, P, KV, _ = k_pages.shape
+    hd = dk
     rep = H // KV
     qg = q.reshape(B, KV, rep, dk).astype(jnp.float32)
     scale = 1.0 / math.sqrt(dk)
@@ -231,8 +462,12 @@ def _attend_flash_lax(q, k_pages, v_pages, block_table, positions,
     def body(i, carry):
         m, l, acc = carry
         pid = block_table[:, i]                          # [B]
-        kb = k_pages[pid].astype(jnp.float32)            # [B,P,KV,hd]
-        vb = v_pages[pid].astype(jnp.float32)
+        if qspec.quantised:
+            kb = dequantise_kv(k_pages[pid], kv["ks"][pid], qspec)
+            vb = dequantise_kv(v_pages[pid], kv["vs"][pid], qspec)
+        else:
+            kb = k_pages[pid].astype(jnp.float32)        # [B,P,KV,hd]
+            vb = v_pages[pid].astype(jnp.float32)
         s = jnp.einsum("bkrh,bskh->bkrs", qg, kb) * scale
         jpos = i * P + jnp.arange(P)
         msk = jpos[None, :] <= positions[:, None]
@@ -255,18 +490,37 @@ def _attend_flash_lax(q, k_pages, v_pages, block_table, positions,
     return out.reshape(B, 1, H * hd).astype(q.dtype)
 
 
+def _as_kv(k_pages, v_pages, k_scales, v_scales,
+           qspec: Optional[KVQuantSpec]):
+    """Assemble the pool dict from positional operands (the public
+    array-level entry points keep the historical signature; quantised
+    callers pass the scale sidecars by keyword)."""
+    qspec = qspec or KVQuantSpec()
+    if not qspec.quantised:
+        return {"k": k_pages, "v": v_pages}, qspec
+    if k_scales is None or v_scales is None:
+        raise ValueError(
+            f"kv dtype {qspec.dtype!r} needs k_scales/v_scales sidecars"
+        )
+    return {"k": k_pages, "v": v_pages, "ks": k_scales, "vs": v_scales}, qspec
+
+
 def dispatch_attention(config, q, k_pages, v_pages, block_table, positions,
                        *, window: Optional[int] = None,
-                       interpret: Optional[bool] = None):
+                       interpret: Optional[bool] = None,
+                       k_scales=None, v_scales=None,
+                       qspec: Optional[KVQuantSpec] = None):
     """Run one paged-attention candidate config.  q ``[B, 1, H, hd]``;
-    returns ``[B, 1, H*hd]`` in q.dtype."""
+    returns ``[B, 1, H*hd]`` in q.dtype.  Quantised pools pass int8
+    code pages plus their ``[n_pages, P, KV]`` scale sidecars; every
+    impl fuses the dequant into its read loop."""
     impl = config["impl"]
+    kv, qspec = _as_kv(k_pages, v_pages, k_scales, v_scales, qspec)
     if impl == "lax":
-        return _attend_lax(q, k_pages, v_pages, block_table, positions,
-                           window)
+        return _attend_lax(q, kv, block_table, positions, window, qspec)
     if impl == "flash-lax":
-        return _attend_flash_lax(q, k_pages, v_pages, block_table,
-                                 positions, window)
+        return _attend_flash_lax(q, kv, block_table, positions, window,
+                                 qspec)
     if impl == "flash":
         from repro.kernels.flash_decode import flash_decode
 
@@ -279,6 +533,7 @@ def dispatch_attention(config, q, k_pages, v_pages, block_table, positions,
             q.reshape(B, KV, rep, hd), k_pages, v_pages, block_table,
             positions + 1, window=window,
             n_splits=config.get("n_splits", 4), interpret=interpret,
+            k_scales=k_scales, v_scales=v_scales, kv_dtype=qspec.dtype,
         )
         return out.reshape(B, 1, H * hd).astype(q.dtype)
     raise ValueError(f"unknown paged attention impl {impl!r}")
@@ -286,18 +541,23 @@ def dispatch_attention(config, q, k_pages, v_pages, block_table, positions,
 
 def paged_attention(q, k_pages, v_pages, block_table, positions, *,
                     window: Optional[int] = None, impl: str = "auto",
-                    tune_on_miss: bool = False):
+                    tune_on_miss: bool = False,
+                    k_scales=None, v_scales=None,
+                    qspec: Optional[KVQuantSpec] = None):
     """Paged decode attention with autotuned dispatch.
 
     ``impl='auto'`` resolves through the shape-keyed cache
     (kernels/autotune.py, same verify-then-time contract as the lookup
     GEMMs); inside jit the lookup is a pure host-side read and a miss
     lowers the ``lax`` oracle.  ``tune_on_miss`` only fires on concrete
-    operands (benchmarks pre-tune; serving never sweeps inline)."""
+    operands (benchmarks pre-tune; serving never sweeps inline).
+    Quantised pools key the cache with the kv dtype as well — an int8
+    pool's winner never serves an fp pool's shape."""
     if impl != "auto":
         return dispatch_attention(
             {"impl": impl}, q, k_pages, v_pages, block_table, positions,
-            window=window,
+            window=window, k_scales=k_scales, v_scales=v_scales,
+            qspec=qspec,
         )
     from repro.kernels import autotune
 
@@ -305,16 +565,23 @@ def paged_attention(q, k_pages, v_pages, block_table, positions, *,
     KV = k_pages.shape[2]
     key = autotune.attn_shape_key(
         B, KV, H // KV, hd, block_table.shape[1], k_pages.shape[1],
-        window,
+        window, kv_dtype=(qspec or KVQuantSpec()).dtype,
     )
     config = autotune.lookup(key)
     if config is None:
         if tune_on_miss and not isinstance(q, jax.core.Tracer):
             config = autotune.tune_attention(
                 q, k_pages, v_pages, block_table, positions, window=window,
+                k_scales=k_scales, v_scales=v_scales, qspec=qspec,
             )
         else:
             config = {"impl": "lax"}
     return dispatch_attention(
         config, q, k_pages, v_pages, block_table, positions, window=window,
+        k_scales=k_scales, v_scales=v_scales, qspec=qspec,
     )
+
+
+def pool_scales(kv: dict):
+    """(k_scales, v_scales) of a pool dict, or (None, None) for fp."""
+    return kv.get("ks"), kv.get("vs")

@@ -166,8 +166,17 @@ def causal_mask(Sq: int, Sk: int, window: Optional[int] = None):
 
 
 def gqa_train(params, x, cfg, positions=None, window: Optional[int] = None,
-              apply_fn=nn.linear_apply, cross_kv=None):
-    """Full-sequence attention. ``cross_kv=(k, v)`` switches to cross-attn."""
+              apply_fn=nn.linear_apply, cross_kv=None,
+              kv_quant_rt: bool = False):
+    """Full-sequence attention. ``cross_kv=(k, v)`` switches to cross-attn.
+
+    ``kv_quant_rt`` (serve prefill only — lm.apply_block sets it when a
+    cache is being built) applies the ``cfg.serve_kv_dtype``
+    quantise->dequantise round-trip to K/V *before* the attention, so
+    the dense prefill attends over exactly the values its cache will
+    hold — the paged chunk prefill reads quantised pages, and the
+    equal-quantisation oracle identity needs the dense logits to do the
+    same.  Training forwards never set it."""
     B, S, _ = x.shape
     q, k, v = _qkv(params, x, cfg, apply_fn)
     if cross_kv is not None:
@@ -180,6 +189,13 @@ def gqa_train(params, x, cfg, positions=None, window: Optional[int] = None,
         sin, cos = nn.rotary_embedding(positions, cfg.kv_head_dim)
         q = nn.apply_rotary(q, sin, cos)
         k = nn.apply_rotary(k, sin, cos)
+        if kv_quant_rt:
+            from repro.kernels import paged
+
+            qs = paged.qspec_for(cfg)
+            if qs.quantised:
+                k = paged.kv_roundtrip(k, qs)
+                v = paged.kv_roundtrip(v, qs)
     out = sdpa(q, k, v, cfg, causal=causal, window=window)
     return apply_fn(params["wo"], out, cfg), (k, v)
 
@@ -199,6 +215,17 @@ def gqa_decode(params, x, cfg, cache, pos, window: Optional[int] = None,
         sin, cos = nn.rotary_embedding(positions, cfg.kv_head_dim)
         q = nn.apply_rotary(q, sin, cos)
         k = nn.apply_rotary(k, sin, cos)
+        from repro.kernels import paged
+
+        qs = paged.qspec_for(cfg)
+        if qs.quantised:
+            # equal-quantisation oracle discipline: the dense cache
+            # stores the exact per-token quantise->dequantise round
+            # trip the paged pool's write+read performs (f32 cache,
+            # lm.zero_cache), so paged-vs-dense greedy outputs stay
+            # bit-identical under cfg.serve_kv_dtype exactly as in fp
+            k = paged.kv_roundtrip(k, qs)
+            v = paged.kv_roundtrip(v, qs)
         kc, vc = cache
         kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 1)
         vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 1)
@@ -224,24 +251,29 @@ def gqa_decode_paged(params, x, cfg, pages, block_table, positions,
                      apply_fn=nn.linear_apply, impl: str = "auto"):
     """Single-token decode against a paged KV pool.
 
-    ``pages = (k_pages, v_pages) [n_pages, P, KV, hd]``; ``positions
-    [B]`` per-slot write positions (no shared clock — slots at
-    different depths decode together).  Attention reads through the
-    block table via ``kernels.paged.paged_attention`` (lax oracle /
-    flash-lax / Pallas flash kernel per ``impl``)."""
+    ``pages`` is the layer's pool dict (``k``/``v`` ``[n_pages, P, KV,
+    hd]``, plus ``ks``/``vs`` scale sidecars when
+    ``cfg.serve_kv_dtype`` is quantised — quantise-on-write, dequant
+    fused into the reader); ``positions [B]`` per-slot write positions
+    (no shared clock — slots at different depths decode together).
+    Attention reads through the block table via
+    ``kernels.paged.paged_attention`` (lax oracle / flash-lax / Pallas
+    flash kernel per ``impl``)."""
     from repro.kernels import paged
 
     B = x.shape[0]
+    qs = paged.qspec_for(cfg)
     q, k, v = _qkv(params, x, cfg, apply_fn)  # S == 1
     sin, cos = nn.rotary_embedding(positions[:, None], cfg.kv_head_dim)
     q = nn.apply_rotary(q, sin, cos)
     k = nn.apply_rotary(k, sin, cos)
-    kp, vp = paged.write_decode(pages[0], pages[1], k, v, block_table,
-                                positions)
-    out = paged.paged_attention(q, kp, vp, block_table, positions,
-                                window=window, impl=impl)
+    kv = paged.write_decode_kv(pages, k, v, block_table, positions, qs)
+    ksc, vsc = paged.pool_scales(kv)
+    out = paged.paged_attention(q, kv["k"], kv["v"], block_table, positions,
+                                window=window, impl=impl,
+                                k_scales=ksc, v_scales=vsc, qspec=qs)
     y = apply_fn(params["wo"], out, cfg)
-    return y, (kp, vp)
+    return y, kv
 
 
 def gqa_prefill_chunk(params, x, cfg, pages, block_table_row, start,
@@ -258,14 +290,14 @@ def gqa_prefill_chunk(params, x, cfg, pages, block_table_row, start,
     from repro.kernels import paged
 
     B, C, _ = x.shape
+    qs = paged.qspec_for(cfg)
     q, k, v = _qkv(params, x, cfg, apply_fn)
     positions = start + jnp.arange(C)[None, :]
     sin, cos = nn.rotary_embedding(positions, cfg.kv_head_dim)
     q = nn.apply_rotary(q, sin, cos)
     k = nn.apply_rotary(k, sin, cos)
-    kp, vp = paged.write_chunk(pages[0], pages[1], k, v, block_table_row,
-                               start)
-    kc, vc = paged.gather_kv(kp, vp, block_table_row[None])
+    kv = paged.write_chunk_kv(pages, k, v, block_table_row, start, qs)
+    kc, vc = paged.gather_kv_deq(kv, block_table_row[None], qs)
     S_alloc = kc.shape[1]
     iq = start + jnp.arange(C)[:, None]
     ik = jnp.arange(S_alloc)[None, :]
@@ -275,7 +307,7 @@ def gqa_prefill_chunk(params, x, cfg, pages, block_table_row, start,
     out = _sdpa(q, kc, vc, mask, cfg)
     H, hd = cfg.n_heads, cfg.kv_head_dim
     y = apply_fn(params["wo"], out.reshape(B, C, H * hd), cfg)
-    return y, (kp, vp)
+    return y, kv
 
 
 def gqa_verify_paged(params, x, cfg, pages, block_table, positions, n_writes,
@@ -299,14 +331,15 @@ def gqa_verify_paged(params, x, cfg, pages, block_table, positions, n_writes,
     from repro.kernels import paged
 
     B, K1, _ = x.shape
+    qs = paged.qspec_for(cfg)
     q, k, v = _qkv(params, x, cfg, apply_fn)
     pos = positions[:, None] + jnp.arange(K1)[None, :]       # [B, K1]
     sin, cos = nn.rotary_embedding(pos, cfg.kv_head_dim)
     q = nn.apply_rotary(q, sin, cos)
     k = nn.apply_rotary(k, sin, cos)
-    kp, vp = paged.write_spec(pages[0], pages[1], k, v, block_table,
-                              positions, n_writes)
-    kc, vc = paged.gather_kv(kp, vp, block_table)
+    kv = paged.write_spec_kv(pages, k, v, block_table, positions,
+                             n_writes, qs)
+    kc, vc = paged.gather_kv_deq(kv, block_table, qs)
     S_alloc = kc.shape[1]
     iq = pos[:, :, None]                                     # [B, K1, 1]
     ik = jnp.arange(S_alloc)[None, None, :]
@@ -316,7 +349,7 @@ def gqa_verify_paged(params, x, cfg, pages, block_table, positions, n_writes,
     out = _sdpa(q, kc, vc, mask[:, None, None], cfg)         # [B,K1,H,hd]
     H, hd = cfg.n_heads, cfg.kv_head_dim
     y = apply_fn(params["wo"], out.reshape(B, K1, H * hd), cfg)
-    return y, (kp, vp)
+    return y, kv
 
 
 # ---------------------------------------------------------------------------

@@ -163,14 +163,30 @@ def supports_paged(cfg) -> bool:
     )
 
 
+def kv_qspec(cfg):
+    """The serve-path KV quantisation spec this config asks for
+    (``cfg.serve_kv_dtype``; kernels/paged.KVQuantSpec)."""
+    from repro.kernels import paged as paged_kernels
+
+    return paged_kernels.qspec_for(cfg)
+
+
 def zero_cache(kind: str, cfg, B: int, S_max: int, enc_len: int = 0,
                paged=None):
     """Decode cache for one block of the given kind.
 
     ``paged`` (a ``kernels.paged.PageSpec``) switches attention kinds
     to the paged pool layout ``[n_pages, page_size, KV, hd]`` — no
-    per-slot axis; ownership lives in the serve loop's block table."""
+    per-slot axis; ownership lives in the serve loop's block table.
+    ``cfg.serve_kv_dtype`` makes the pool quantised (int8/int4 codes +
+    per-page-slot scale sidecars).  The DENSE attention caches of a
+    quantised config switch to f32 and hold quantise->dequantise
+    round-tripped values (written by the attention decode/prefill
+    paths): the dense loop is then the equal-quantisation oracle the
+    paged path is bit-exact against — a bf16 cache would re-round the
+    dequantised products and break that identity."""
     KV, hd = cfg.n_kv, cfg.kv_head_dim
+    qs = kv_qspec(cfg)
     dt = jnp.bfloat16
     if paged is not None:
         if kind not in PAGED_KINDS or cfg.attn_kind == "mla":
@@ -178,20 +194,25 @@ def zero_cache(kind: str, cfg, B: int, S_max: int, enc_len: int = 0,
                 f"paged serve cache unsupported for block kind {kind!r} "
                 f"(attn_kind={cfg.attn_kind!r}); see supports_paged()"
             )
-        z = jnp.zeros((paged.n_pages, paged.page_size, KV, hd), dt)
-        return {"k": z, "v": z}
+        from repro.kernels import paged as paged_kernels
+
+        return paged_kernels.zero_kv_pool(paged, KV, hd, qspec=qs)
     if kind in ("attn", "attn_moe"):
         if cfg.attn_kind == "mla":
             return {
                 "ckv": jnp.zeros((B, S_max, cfg.mla_kv_lora), dt),
                 "kr": jnp.zeros((B, S_max, cfg.mla_rope_dim), dt),
             }
+        if qs.quantised:
+            dt = jnp.float32
         return {
             "k": jnp.zeros((B, S_max, KV, hd), dt),
             "v": jnp.zeros((B, S_max, KV, hd), dt),
         }
     if kind == "attn_local":
         W = min(cfg.local_window, S_max)
+        if qs.quantised:
+            dt = jnp.float32
         return {
             "k": jnp.zeros((B, W, KV, hd), dt),
             "v": jnp.zeros((B, W, KV, hd), dt),
@@ -232,9 +253,15 @@ def cache_axes(kind: str, cfg, paged=None):
     if paged is not None:
         if cfg.n_kv % MODEL_AXIS == 0:
             s = P(None, None, "model", None)
+            s3 = P(None, None, "model")
         else:
             s = P("model", None, None, None)   # shard the page dim
-        return {"k": s, "v": s}
+            s3 = P("model", None, None)
+        out = {"k": s, "v": s}
+        if kv_qspec(cfg).quantised:
+            # scale sidecars shard with their codes (same leading dims)
+            out["ks"] = out["vs"] = s3
+        return out
     if kind in ("attn", "attn_moe") and cfg.attn_kind == "mla":
         return {"ckv": P(b, "model", None), "kr": P(b, "model", None)}
     if kind in ("attn", "attn_moe", "attn_local", "dec_cross"):
@@ -289,27 +316,29 @@ def apply_block(
         is_mla = cfg.attn_kind == "mla"
         new_cache = cache
         if paged_ctx is not None and kind in PAGED_KINDS:
-            pages = (cache["k"], cache["v"])
+            # the cache IS the layer's pool dict (k/v codes + scale
+            # sidecars when cfg.serve_kv_dtype is quantised); the
+            # attention entry points write-and-read it as a unit
             if "n_writes" in paged_ctx:
-                y, (kc, vc) = attn.gqa_verify_paged(
-                    params["attn"], h, cfg, pages,
+                y, kv = attn.gqa_verify_paged(
+                    params["attn"], h, cfg, cache,
                     paged_ctx["block_table"], paged_ctx["positions"],
                     paged_ctx["n_writes"], window=window, apply_fn=apply_fn,
                 )
             elif decode:
-                y, (kc, vc) = attn.gqa_decode_paged(
-                    params["attn"], h, cfg, pages,
+                y, kv = attn.gqa_decode_paged(
+                    params["attn"], h, cfg, cache,
                     paged_ctx["block_table"], paged_ctx["positions"],
                     window=window, apply_fn=apply_fn,
                     impl=paged_ctx.get("impl", "auto"),
                 )
             else:
-                y, (kc, vc) = attn.gqa_prefill_chunk(
-                    params["attn"], h, cfg, pages,
+                y, kv = attn.gqa_prefill_chunk(
+                    params["attn"], h, cfg, cache,
                     paged_ctx["block_table"], paged_ctx["start"],
                     window=window, apply_fn=apply_fn,
                 )
-            new_cache = dict(cache, k=kc, v=vc)
+            new_cache = dict(cache, **kv)
             # fall through to the shared residual + FFN/MoE tail
             # (dec_cross can never be paged, per supports_paged)
         elif decode:
@@ -337,7 +366,13 @@ def apply_block(
                 y, kv = _bidir_attn(params["attn"], h, cfg, apply_fn)
             else:
                 fwd = attn.mla_train if is_mla else attn.gqa_train
-                y, kv = fwd(params["attn"], h, cfg, window=window, apply_fn=apply_fn)
+                # serve prefill (cache being built): round-trip K/V
+                # through cfg.serve_kv_dtype before the attention so
+                # the dense oracle's logits match the paged chunk
+                # prefill's quantised-page reads (no-op for fp / train)
+                y, kv = fwd(params["attn"], h, cfg, window=window,
+                            apply_fn=apply_fn,
+                            kv_quant_rt=cache is not None)
             if cache is not None:  # prefill: store the cache
                 new_cache = _store_prefill(kind, cfg, cache, kv)
         x = x + y
@@ -420,6 +455,12 @@ def _store_prefill(kind, cfg, cache, kv):
                 cache["kr"], kr.astype(cache["kr"].dtype), 0, 1
             ),
         )
+    # NOTE: under a quantised cfg.serve_kv_dtype, k/v arrive already
+    # round-tripped — gqa_train applies the quantise->dequantise before
+    # its attention (kv_quant_rt), so the prefill logits and the stored
+    # cache see the same values.  Round-tripping again here would NOT
+    # be a no-op in every case (the absmax element can re-round), so
+    # the store is a plain dtype cast into the f32 oracle cache.
     k, v = kv
     if kind == "attn_local":
         W = cache["k"].shape[1]
@@ -448,6 +489,12 @@ def _local_decode(params, h, cfg, cache, pos, slot, apply_fn):
     sin, cos = nn.rotary_embedding(positions, cfg.kv_head_dim)
     q = nn.apply_rotary(q, sin, cos)
     k = nn.apply_rotary(k, sin, cos)
+    qs = kv_qspec(cfg)
+    if qs.quantised:   # equal-quantisation oracle (see _store_prefill)
+        from repro.kernels import paged as paged_kernels
+
+        k = paged_kernels.kv_roundtrip(k, qs)
+        v = paged_kernels.kv_roundtrip(v, qs)
     kc = jax.lax.dynamic_update_slice_in_dim(
         cache["k"], k.astype(cache["k"].dtype), slot, 1
     )

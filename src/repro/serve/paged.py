@@ -27,6 +27,15 @@ Replaces the dense loop's two dominant costs at once:
   padding rows of the fixed window are routed to the scratch page.
   Outputs are bit-identical to plain greedy decode at every accept
   rate (the acceptance rule replays the argmax chain exactly).
+- **KV bandwidth / capacity.**  ``cfg.serve_kv_dtype`` (ctor
+  ``kv_dtype``) stores the paged pool quantised — int8, or int4 packed
+  two codes per byte — with per-page-slot absmax scales next to the
+  codes (kernels/paged.KVQuantSpec).  Writes quantise, the attention
+  readers dequantise in-kernel, so decode's KV traffic and the pool's
+  bytes both shrink ~2x / ~4x — which is more live slots at a fixed
+  memory budget.  The dense oracle applies the identical round-trip to
+  its cache, so paged-vs-dense bit-exactness holds at equal
+  quantisation; fp (the default) is byte-for-byte the old layout.
 - **Recompute.**  A radix-tree prefix cache (serve/prefix_cache.py)
   keys finished prompts' pages by token content.  Admission maps the
   longest cached page-aligned prefix read-only into the slot's block
@@ -161,7 +170,8 @@ class PagedServeLoop:
                  chunk: int = 16, n_pages: Optional[int] = None,
                  attn_impl: Optional[str] = None,
                  prefix_cache: Optional[bool] = None,
-                 spec_k: Optional[int] = None, drafter=None):
+                 spec_k: Optional[int] = None, drafter=None,
+                 kv_dtype: Optional[str] = None):
         if not lm.supports_paged(cfg):
             raise ValueError(
                 f"config {cfg.name!r} has non-pageable block kinds; "
@@ -169,6 +179,13 @@ class PagedServeLoop:
             )
         if attn_impl is not None:
             cfg = dataclasses.replace(cfg, serve_paged_attn_impl=attn_impl)
+        if kv_dtype is not None:
+            # quantised KV pool (kernels/paged.KVQuantSpec): int8/int4
+            # codes + per-page-slot scales, dequant fused in-kernel.
+            # Validated eagerly — a bad dtype should fail construction,
+            # not the first forward.
+            cfg = dataclasses.replace(cfg, serve_kv_dtype=kv_dtype)
+        self.kv_spec = lm.kv_qspec(cfg)
         self.params, self.cfg = params, cfg
         self.B, self.S_max = batch_slots, s_max
         self.eos_id = eos_id
@@ -692,6 +709,15 @@ class PagedServeLoop:
         return freed
 
     # -- introspection -------------------------------------------------------
+
+    def kv_pool_bytes(self) -> int:
+        """Device bytes of the whole paged KV pool (codes + scale
+        sidecars, every layer) — the memory-capacity headline a
+        quantised ``kv_dtype`` shrinks ~2x (int8) / ~4x (int4)."""
+        return int(sum(
+            leaf.size * leaf.dtype.itemsize
+            for leaf in jax.tree.leaves(self.caches)
+        ))
 
     def spec_stats(self) -> dict:
         """Decode-phase throughput accounting (the bench's numbers).

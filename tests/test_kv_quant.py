@@ -1,0 +1,381 @@
+"""Quantised paged KV cache (this PR's tentpole surface).
+
+Two contracts:
+
+1. **Equal-quantisation bit-exactness.**  With ``cfg.serve_kv_dtype``
+   set, the dense loop's caches hold the same per-token quantise ->
+   dequantise round-trip the paged pool's write+read performs (f32
+   oracle caches, ``lm.zero_cache``), so paged greedy outputs must be
+   BIT-IDENTICAL to the quantised dense oracle — through prefix-cache
+   hits, copy-on-write divergence, and speculative-decoding rollback,
+   exactly like the fp path.  This holds by construction because the
+   quantiser is a pure per-token function (per-page-slot scales, not a
+   whole-page scale whose rescale history would depend on write order).
+
+2. **fp mode byte-for-byte unchanged.**  The default dtype keeps the
+   historical two-leaf bf16 pool and dense bf16 caches; no scale
+   sidecars exist anywhere.
+
+Plus kernel-level coverage: every attention reader (lax oracle,
+flash-lax, Pallas split-K in interpret mode) agrees on quantised
+pools; int4 pack/unpack is lossless; and a hypothesis fuzz bounds the
+quantise/dequantise round-trip error per head dim.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import smoke_config
+from repro.kernels import autotune, paged
+from repro.kernels.flash_decode import flash_decode
+from repro.models import lm
+from repro.serve.loop import Request, ServeLoop
+from repro.serve.paged import PagedServeLoop
+
+
+def _cfg(dtype):
+    return dataclasses.replace(smoke_config("codeqwen1.5-7b"),
+                               serve_kv_dtype=dtype)
+
+
+@pytest.fixture(scope="module")
+def params():
+    p, _ = lm.init_lm(jax.random.PRNGKey(0), _cfg("fp"), purpose="serve")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# quantiser primitives
+# ---------------------------------------------------------------------------
+
+
+def test_int4_pack_roundtrip_lossless():
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(-8, 8, size=(3, 5, 10)), jnp.int8)
+    out = paged.unpack_int4(paged.pack_int4(codes))
+    assert np.array_equal(np.asarray(out), np.asarray(codes))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       hd=st.sampled_from([2, 4, 8, 16, 64, 128]),
+       dtype=st.sampled_from(["int8", "int4"]),
+       scale_pow=st.integers(min_value=-8, max_value=8))
+def test_roundtrip_error_bound_per_head_dim(seed, hd, dtype, scale_pow):
+    """|x - dq(q(x))| <= amax * (0.5/qmax + 2^-7) per quantised vector:
+    half a quantisation step plus the bf16 scale-storage rounding."""
+    qs = paged.KVQuantSpec(dtype)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, hd)) * (2.0 ** scale_pow),
+                    jnp.float32)
+    out = np.asarray(paged.kv_roundtrip(x, qs))
+    amax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    bound = amax * (0.5 / qs.qmax + 2.0 ** -7) + 1e-12
+    assert np.all(np.abs(out - np.asarray(x)) <= bound)
+
+
+def test_roundtrip_zero_and_idempotence_shapes():
+    qs = paged.KVQuantSpec("int8")
+    z = jnp.zeros((2, 3, 16))
+    assert np.array_equal(np.asarray(paged.kv_roundtrip(z, qs)),
+                          np.zeros((2, 3, 16)))
+    codes, scales = paged.quantise_kv(jnp.ones((2, 3, 16)), qs)
+    assert codes.shape == (2, 3, 16) and scales.shape == (2, 3)
+    qs4 = paged.KVQuantSpec("int4")
+    codes4, _ = paged.quantise_kv(jnp.ones((2, 3, 16)), qs4)
+    assert codes4.shape == (2, 3, 8)
+    with pytest.raises(ValueError, match="even head dim"):
+        paged.quantise_kv(jnp.ones((2, 15)), qs4)
+    with pytest.raises(ValueError, match="serve_kv_dtype"):
+        paged.KVQuantSpec("fp8")
+
+
+# ---------------------------------------------------------------------------
+# attention readers on quantised pools
+# ---------------------------------------------------------------------------
+
+
+def _quant_pool(seed, dtype, B=3, KV=2, rep=4, hd=16, P=8, MB=8):
+    qs = paged.KVQuantSpec(dtype)
+    rng = np.random.default_rng(seed)
+    n_pages = B * MB + 1
+    kq, ks = paged.quantise_kv(
+        jnp.asarray(rng.normal(size=(n_pages, P, KV, hd)), jnp.float32), qs)
+    vq, vs = paged.quantise_kv(
+        jnp.asarray(rng.normal(size=(n_pages, P, KV, hd)), jnp.float32), qs)
+    bt = jnp.asarray(np.stack(
+        [1 + b * MB + np.arange(MB) for b in range(B)]).astype(np.int32))
+    q = jnp.asarray(rng.normal(size=(B, 1, KV * rep, hd)), jnp.float32)
+    return qs, q, {"k": kq, "v": vq, "ks": ks, "vs": vs}, bt
+
+
+@pytest.mark.parametrize("dtype", ["int8", "int4"])
+@pytest.mark.parametrize("window", [None, 16])
+def test_quantised_flash_paths_match_lax_oracle(dtype, window):
+    """flash-lax (in-loop dequant) and the Pallas kernel (in-register
+    dequant, int4 nibble unpack) must match the dequantising gather
+    oracle at uneven per-slot lengths."""
+    qs, q, kv, bt = _quant_pool(0, dtype)
+    B, _, H, hd = q.shape
+    KV = kv["k"].shape[2]
+    positions = jnp.asarray(np.array([5, 37, 63], np.int32))
+    args = dict(k_scales=kv["ks"], v_scales=kv["vs"], qspec=qs,
+                window=window)
+    ref = paged.dispatch_attention({"impl": "lax"}, q, kv["k"], kv["v"],
+                                   bt, positions, **args)
+    fl = paged.dispatch_attention({"impl": "flash-lax"}, q, kv["k"],
+                                  kv["v"], bt, positions, **args)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(fl),
+                               rtol=2e-5, atol=2e-5)
+    for n_splits in (1, 3, 4):
+        out = flash_decode(
+            q.reshape(B, KV, H // KV, hd), kv["k"], kv["v"], bt,
+            positions + 1, window=window, n_splits=n_splits,
+            interpret=True, k_scales=kv["ks"], v_scales=kv["vs"],
+            kv_dtype=dtype,
+        ).reshape(B, 1, -1)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"splits={n_splits}")
+
+
+def test_quantised_pool_requires_scales():
+    qs, q, kv, bt = _quant_pool(1, "int8")
+    positions = jnp.asarray(np.array([5, 7, 9], np.int32))
+    with pytest.raises(ValueError, match="sidecar"):
+        paged.dispatch_attention({"impl": "lax"}, q, kv["k"], kv["v"],
+                                 bt, positions, qspec=qs)
+
+
+def test_write_spec_padding_scales_routed_to_scratch():
+    """Padding rows of the verify window must land codes AND scales in
+    the scratch page, never in live pages."""
+    qs, _, kv, bt = _quant_pool(2, "int8", B=1, MB=4)
+    positions = jnp.asarray([5], np.int32)
+    k_new = jnp.full((1, 4, 2, 16), 3.0)
+    out = paged.write_spec_kv(kv, k_new, k_new, bt, positions,
+                              jnp.asarray([2], np.int32), qs)
+    live = np.asarray(out["ks"][int(bt[0, 0])])     # page holding pos 5-7
+    # rows 0,1 valid -> offsets 5,6 written; rows 2,3 pad -> scratch
+    assert np.all(live[5:7] == np.asarray(
+        paged.quantise_kv(k_new[:, 0], qs)[1][0]))
+    assert np.array_equal(np.asarray(out["ks"][0, 7]),
+                          np.asarray(paged.quantise_kv(
+                              k_new[:, 0], qs)[1][0]))   # pad @ scratch
+    # untouched live page slots keep their original scales
+    assert np.array_equal(np.asarray(out["ks"][int(bt[0, 1])]),
+                          np.asarray(kv["ks"][int(bt[0, 1])]))
+
+
+def test_copy_page_kv_copies_codes_and_scales():
+    qs, _, kv, _ = _quant_pool(3, "int8", B=1, MB=4)
+    out = paged.copy_page_kv(kv, jnp.int32(1), jnp.int32(3))
+    for name in ("k", "v", "ks", "vs"):
+        assert np.array_equal(np.asarray(out[name][3]),
+                              np.asarray(kv[name][1])), name
+
+
+def test_autotune_key_includes_kv_dtype():
+    k_fp = autotune.attn_shape_key(4, 2, 4, 64, 8, 16, None)
+    k_i8 = autotune.attn_shape_key(4, 2, 4, 64, 8, 16, None,
+                                   kv_dtype="int8")
+    assert k_fp != k_i8 and k_i8.endswith(",qint8")
+    # fp keys keep the historical format (cache compatibility)
+    assert autotune.attn_shape_key(4, 2, 4, 64, 8, 16, None,
+                                   kv_dtype="fp") == k_fp
+
+
+# ---------------------------------------------------------------------------
+# fp mode unchanged
+# ---------------------------------------------------------------------------
+
+
+def test_fp_pool_layout_unchanged():
+    """The default dtype keeps the historical cache trees: bf16 pools
+    with exactly {k, v} leaves, bf16 dense caches — no sidecars."""
+    cfg = _cfg("fp")
+    spec = paged.spec_for(32, 2, page_size=8)
+    caches_p, _ = lm.init_caches(cfg, 2, 32, paged=spec)
+    for seg in caches_p:
+        for leaves in seg.values():
+            assert set(leaves) == {"k", "v"}
+            assert all(l.dtype == jnp.bfloat16 for l in leaves.values())
+    caches_d, _ = lm.init_caches(cfg, 2, 32)
+    for seg in caches_d:
+        for leaves in seg.values():
+            assert all(l.dtype == jnp.bfloat16 for l in leaves.values())
+    # quantised pools: int8 codes + bf16 scales; dense oracle f32
+    cfg8 = _cfg("int8")
+    caches_q, _ = lm.init_caches(cfg8, 2, 32, paged=spec)
+    for seg in caches_q:
+        for leaves in seg.values():
+            assert set(leaves) == {"k", "v", "ks", "vs"}
+            assert leaves["k"].dtype == jnp.int8
+            assert leaves["ks"].dtype == paged.SCALE_DTYPE
+    caches_qd, _ = lm.init_caches(cfg8, 2, 32)
+    for seg in caches_qd:
+        for leaves in seg.values():
+            assert all(l.dtype == jnp.float32 for l in leaves.values())
+    # int4 halves the code width
+    spec_shape = caches_q[0]["b0"]["k"].shape
+    caches_q4, _ = lm.init_caches(_cfg("int4"), 2, 32, paged=spec)
+    assert caches_q4[0]["b0"]["k"].shape[-1] * 2 == spec_shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# model level: chunked prefill + paged decode vs the quantised oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", ["int8", "int4"])
+def test_chunked_prefill_and_paged_decode_bitexact_vs_quantised_dense(
+        params, dtype):
+    """The quantised twin of the fp bit-exactness spot check: fixed-
+    shape chunk prefill + paged decode against the dense path under the
+    same ``serve_kv_dtype``."""
+    cfg = _cfg(dtype)
+    rng = np.random.default_rng(0)
+    L, C, P, S_max = 11, 8, 8, 32
+    prompt = rng.integers(0, cfg.vocab, size=L).astype(np.int32)
+
+    lg_d, caches_d = lm.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                                cfg, S_max=S_max)
+
+    spec = paged.spec_for(S_max, 1, page_size=P)
+    caches_p, _ = lm.init_caches(cfg, 1, S_max, paged=spec)
+    n_chunks = -(-L // C)
+    need = -(-(n_chunks * C) // P)
+    row = np.zeros(spec.max_blocks, np.int32)
+    row[:need] = 1 + np.arange(need)
+    bt_row = jnp.asarray(row)
+    lg_p = None
+    for ci in range(n_chunks):
+        buf = np.zeros(C, np.int32)
+        seg = prompt[ci * C:(ci + 1) * C]
+        buf[: len(seg)] = seg
+        last = (L - 1) - ci * C if ci == n_chunks - 1 else 0
+        lg_p, caches_p = lm.prefill_chunk(
+            params, caches_p, jnp.asarray(buf[None]), jnp.int32(ci * C),
+            bt_row, cfg, last=jnp.int32(last),
+        )
+    assert jnp.array_equal(lg_d[0], lg_p), "prefill logits diverged"
+
+    bt = bt_row[None]
+    cur = jnp.argmax(lg_d, -1)[:, None].astype(jnp.int32)
+    for step in range(4):
+        lgd, caches_d = lm.decode_step(params, caches_d, cur,
+                                       jnp.int32(L + step), cfg)
+        lgp, caches_p = lm.decode_step_paged(
+            params, caches_p, cur, jnp.asarray([L + step], np.int32), bt,
+            cfg)
+        assert jnp.array_equal(lgd, lgp), f"decode step {step} diverged"
+        cur = jnp.argmax(lgd, -1)[:, None].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# serve-loop composition: prefix hit -> CoW divergence -> spec rollback
+# ---------------------------------------------------------------------------
+
+
+def _solo_oracle(params, cfg, prompts, max_new, s_max):
+    """Each request run solo through one dense quantised-oracle loop."""
+    solo = ServeLoop(params, cfg, batch_slots=1, s_max=s_max)
+    outs = []
+    for i, p in enumerate(prompts):
+        solo.submit(Request(rid=1000 + i, prompt=p.copy(),
+                            max_new_tokens=max_new))
+        outs.append(solo.run()[-1].output)
+    return outs
+
+
+def test_int8_prefix_cow_spec_composition_bitexact(params):
+    """The full composition on int8 pages: shared prompts prime the
+    radix tree, later admissions map cached pages read-only, suffix
+    prefill CoWs the boundary page, speculation drafts + rolls back on
+    (possibly shared) quantised pages — and every output is still
+    bit-identical to the quantised dense oracle.  Pool/tree invariants
+    hold throughout."""
+    cfg = _cfg("int8")
+    rng = np.random.default_rng(5)
+    shared = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    prompts = [np.concatenate(
+        [shared, rng.integers(0, cfg.vocab, 1 + (i % 3)).astype(np.int32)])
+        for i in range(4)]
+    # a fully-cached prompt: its last chunk reruns INSIDE the cached
+    # range, so admission must CoW the boundary page (the divergence
+    # path this test exists to compose with speculation)
+    prompts.insert(2, shared.copy())
+    max_new, s_max = 8, 64
+
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=s_max,
+                          page_size=8, chunk=8, spec_k=3)
+    assert loop.kv_spec.dtype == "int8"
+    for i, p in enumerate(prompts):
+        loop.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=max_new))
+    done = sorted(loop.run(), key=lambda r: r.rid)
+    loop.pages.check()
+    loop.prefix.check()
+    loop.check_compiled()
+    assert loop.prefix.hit_blocks > 0, "no prefix hits: test is vacuous"
+    assert loop.cow_copies > 0, "no CoW: test is vacuous"
+    assert loop.spec_steps > 0, "no verify forwards: test is vacuous"
+
+    want = _solo_oracle(params, cfg, prompts, max_new, s_max)
+    for d, w in zip(done, want):
+        assert np.array_equal(d.output, w), d.rid
+
+
+def test_int8_pool_bytes_and_kv_dtype_knob(params):
+    """ctor kv_dtype overrides cfg; int8 pools measure < 60% of fp
+    bytes at the same geometry (codes + bf16 scale sidecar vs bf16)."""
+    cfg = _cfg("fp")
+    mk = lambda dt: PagedServeLoop(params, cfg, batch_slots=2, s_max=32,
+                                   page_size=8, chunk=8, kv_dtype=dt)
+    fp_loop, q_loop = mk(None), mk("int8")
+    assert fp_loop.kv_spec.dtype == "fp"
+    assert q_loop.kv_spec.dtype == "int8"
+    assert q_loop.kv_pool_bytes() < 0.6 * fp_loop.kv_pool_bytes()
+    with pytest.raises(ValueError, match="serve_kv_dtype"):
+        mk("float8")
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       dtype=st.sampled_from(["int8", "int4"]),
+       spec_k=st.sampled_from([0, 3]))
+def test_quantised_serve_fuzz_invariants_and_bitexactness(seed, dtype,
+                                                         spec_k):
+    """Random mixed workloads under pool pressure on quantised pages:
+    outputs stay bit-identical to the quantised dense oracle and the
+    PageManager/PrefixCache invariants stay green."""
+    cfg = _cfg(dtype)
+    params, _ = lm.init_lm(jax.random.PRNGKey(1), cfg, purpose="serve")
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    prompts = []
+    for i in range(4):
+        extra = rng.integers(0, cfg.vocab, rng.integers(1, 9)).astype(
+            np.int32)
+        prompts.append(np.concatenate([base, extra]) if rng.random() < 0.5
+                       else extra)
+    max_new, s_max = int(rng.integers(2, 7)), 48
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=s_max,
+                          page_size=8, chunk=8, spec_k=spec_k)
+    for i, p in enumerate(prompts):
+        loop.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=max_new))
+    done = sorted(loop.run(), key=lambda r: r.rid)
+    loop.pages.check()
+    if loop.prefix is not None:
+        loop.prefix.check()
+    want = _solo_oracle(params, cfg, prompts, max_new, s_max)
+    for d, w in zip(done, want):
+        assert np.array_equal(d.output, w), (seed, d.rid)
