@@ -54,7 +54,24 @@ Two measurements:
    at equal quantisation is asserted in tests/test_kv_quant.py, not
    here.
 
-5. **Speculative-decoding scenario (repetitive text).**  The same
+5. **Scheduler / preemption scenario.**  Two parts at one fixed int8
+   pool budget sized to force exhaustion.  (a) Deterministic: the same
+   static workload under worst-case reservation vs on-demand admission
+   — the concurrency headline is ``concurrent_slots_on_demand >=
+   1.5 * concurrent_slots_reserved`` (gated in CI), with outputs
+   asserted identical across modes (preempt -> recompute -> resume is
+   invisible to the math; the bit-exactness proof itself lives in
+   tests/test_scheduler.py).  (b) An arrival process: Poisson
+   arrivals, mixed prompt lengths and priorities, driven through
+   ``loop.step()`` against the wall clock.  Reports p50/p99
+   time-to-first-token and queue wait, preemption count, recompute
+   token overhead, and the page-pool high-water mark; CI gates p99
+   TTFT finite with every request completed (the aging rule means no
+   starvation even under a preemption-forcing pool).  Both parts run
+   with ``serve_check_invariants`` on — the bench smoke doubles as a
+   structural-invariant soak.
+
+6. **Speculative-decoding scenario (repetitive text).**  The same
    workload through the paged loop with the n-gram (prompt-lookup)
    drafter on vs off.  The smoke model's greedy decoding settles into
    repeating spans — the repetitive-text regime speculation targets
@@ -438,6 +455,132 @@ def _kv_quant_scenario(params, cfg, S_max, quiet, fast):
     return doc
 
 
+def _sched_scenario(params, cfg, quiet, fast):
+    """Scheduling under pool exhaustion at a fixed int8 budget: the
+    on-demand concurrency headline (deterministic part) and the
+    arrival-process SLO numbers (Poisson part).  See module docstring
+    item 5; the CI gates read this scenario's doc."""
+    import time
+
+    P = C = 16
+    s_max = 128
+    n_pages = 13                      # 12 usable: forces preemptions
+    B = 8
+    L = 16
+    max_new = 24 if fast else 40
+    n_req = 8 if fast else 10
+    c = dataclasses.replace(cfg, serve_kv_dtype="int8",
+                            serve_check_invariants=True)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, L).astype(np.int32)
+               for _ in range(n_req)]
+
+    # -- (a) deterministic: reserved vs on-demand, same pool/workload --
+    outs, mode_doc = {}, {}
+    for mode in ("reserved", "on_demand"):
+        loop = PagedServeLoop(params, c, batch_slots=B, s_max=s_max,
+                              page_size=P, chunk=C, n_pages=n_pages,
+                              on_demand=(mode == "on_demand"))
+        for i, p in enumerate(prompts):
+            loop.submit(Request(rid=i, prompt=p.copy(),
+                                max_new_tokens=max_new))
+        outs[mode] = {r.rid: r.output for r in loop.run()}
+        ss = loop.sched_stats()
+        mode_doc[mode] = {
+            "peak_live_slots": ss["peak_live_slots"],
+            "preemptions": ss["preemptions"],
+            "resumes": ss["resumes"],
+            "resume_prefill_tokens": ss["resume_prefill_tokens"],
+            "pool_pages_peak": ss["pool_pages_peak"],
+        }
+        loop.pages.check()
+    identical = all(np.array_equal(outs["reserved"][r], outs["on_demand"][r])
+                    for r in outs["reserved"])
+    assert identical, "on-demand/preempted outputs diverged from reserved"
+
+    # -- (b) Poisson arrivals through loop.step() against the clock --
+    n_arr = 10 if fast else 16
+    mean_gap_s = 0.03
+    rng_a = np.random.default_rng(5)
+    gaps = rng_a.exponential(mean_gap_s, n_arr)
+    lens = rng_a.integers(8, 49, n_arr)
+    news = rng_a.integers(12, 25, n_arr)
+    prios = rng_a.integers(-1, 2, n_arr)
+    arrivals = [Request(rid=i,
+                        prompt=rng_a.integers(0, cfg.vocab, int(lens[i]))
+                        .astype(np.int32),
+                        max_new_tokens=int(news[i]),
+                        priority=int(prios[i]))
+                for i in range(n_arr)]
+    loop = PagedServeLoop(params, c, batch_slots=B, s_max=s_max,
+                          page_size=P, chunk=C, n_pages=n_pages)
+    # warm the compile set outside the timed region (a deployment's
+    # steady state; a cold trace would dominate the first TTFT sample)
+    loop.submit(Request(rid=-1, prompt=prompts[0].copy(),
+                        max_new_tokens=2))
+    loop.run()
+    loop.ttft_s.clear()
+    loop.queue_wait_s.clear()
+    t0 = time.perf_counter()
+    due = np.cumsum(gaps)
+    nxt = 0
+    while nxt < n_arr or len(loop.sched) \
+            or any(s is not None for s in loop.slots):
+        now = time.perf_counter() - t0
+        while nxt < n_arr and now >= due[nxt]:
+            loop.submit(arrivals[nxt])
+            nxt += 1
+        if not loop.step() and nxt < n_arr:
+            time.sleep(max(0.0, due[nxt] - (time.perf_counter() - t0)))
+    wall = time.perf_counter() - t0
+    ss = loop.sched_stats()
+    ttft = np.asarray(ss["ttft_s"])
+    qwait = np.asarray(ss["queue_wait_s"])
+    completed = sum(r.rid >= 0 for r in loop.done)
+    arr_doc = {
+        "n_requests": n_arr,
+        "mean_interarrival_s": mean_gap_s,
+        "wall_s": wall,
+        "completed": int(completed),
+        "p50_ttft_s": float(np.percentile(ttft, 50)),
+        "p99_ttft_s": float(np.percentile(ttft, 99)),
+        "p50_queue_wait_s": float(np.percentile(qwait, 50)),
+        "p99_queue_wait_s": float(np.percentile(qwait, 99)),
+        "preemptions": ss["preemptions"],
+        "resumes": ss["resumes"],
+        "resume_prefill_tokens": ss["resume_prefill_tokens"],
+        "recompute_overhead_frac":
+            ss["resume_prefill_tokens"] / max(loop.gen_tokens, 1),
+        "pool_pages_peak": ss["pool_pages_peak"],
+        "peak_queue": ss["peak_queue"],
+    }
+    loop.pages.check()
+    doc = {
+        "kv_dtype": "int8",
+        "pool_pages": n_pages - 1,
+        "batch_slots": B,
+        "max_new_tokens": max_new,
+        "concurrent_slots_reserved":
+            mode_doc["reserved"]["peak_live_slots"],
+        "concurrent_slots_on_demand":
+            mode_doc["on_demand"]["peak_live_slots"],
+        "outputs_identical_across_modes": bool(identical),
+        "reserved": mode_doc["reserved"],
+        "on_demand": mode_doc["on_demand"],
+        "arrivals": arr_doc,
+    }
+    if not quiet:
+        csv_row("scheduler", "slots_reserved", "slots_on_demand",
+                "preemptions", "p50_ttft_ms", "p99_ttft_ms")
+        csv_row(f"{n_pages - 1}pg_int8",
+                doc["concurrent_slots_reserved"],
+                doc["concurrent_slots_on_demand"],
+                arr_doc["preemptions"],
+                f"{arr_doc['p50_ttft_s'] * 1e3:.0f}",
+                f"{arr_doc['p99_ttft_s'] * 1e3:.0f}")
+    return doc
+
+
 def _spec_scenario(params, cfg, quiet, fast):
     """Repetitive-text speculative decoding: n-gram drafter on vs off
     on the identical workload (smoke model: its greedy decode settles
@@ -523,6 +666,7 @@ def run(quiet=False, json_path=None, fast=False):
     counts = _compile_counts(params_c, cfg_c, quiet)
     shared = _shared_prefix_scenario(params, cfg, quiet, fast)
     kv_quant = _kv_quant_scenario(params, cfg, S_max, quiet, fast)
+    sched = _sched_scenario(params_c, cfg_c, quiet, fast)
     spec = _spec_scenario(params_c, cfg_c, quiet, fast)
     doc = {
         "arch": ARCH,
@@ -535,6 +679,7 @@ def run(quiet=False, json_path=None, fast=False):
         "compile_counts": counts,
         "shared_prefix": shared,
         "kv_quant": kv_quant,
+        "scheduler": sched,
         "spec_decode": spec,
         # which autotune keys this run touched (diagnosable artifacts:
         # a restored CI cache shows hits, a cold one shows tunes)

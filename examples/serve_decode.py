@@ -4,6 +4,7 @@
     PYTHONPATH=src python examples/serve_decode.py --shared-prefix
     PYTHONPATH=src python examples/serve_decode.py --spec-k 4
     PYTHONPATH=src python examples/serve_decode.py --kv-dtype int8
+    PYTHONPATH=src python examples/serve_decode.py --pool-pages 10
 
 Runs the slot-based serving loop (prefill + greedy decode) with each
 serve impl and reports tokens/s (CPU wall time is illustrative; the
@@ -72,6 +73,15 @@ def main():
                          "slot scales and dequantise inside the "
                          "attention kernels — ~2x/~4x less KV traffic "
                          "and pool bytes (needs a gqa arch)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="shrink the paged KV pool to this many pages "
+                         "(0 = the default worst-case sizing); a tight "
+                         "pool forces mid-decode preemptions and "
+                         "recompute-resume — outputs stay bit-identical")
+    ap.add_argument("--reserved", action="store_true",
+                    help="worst-case page reservation at admission "
+                         "(cfg.serve_on_demand_pages=False): exhaustion "
+                         "impossible, concurrency pessimistic")
     args = ap.parse_args()
     if ((args.shared_prefix or args.spec_k or args.kv_dtype != "fp")
             and args.arch == "xlstm-350m"):
@@ -86,7 +96,9 @@ def main():
                                   page_size=8, chunk=8,
                                   prefix_cache=not args.no_prefix_cache,
                                   spec_k=args.spec_k,
-                                  kv_dtype=args.kv_dtype)
+                                  kv_dtype=args.kv_dtype,
+                                  n_pages=args.pool_pages or None,
+                                  on_demand=not args.reserved)
         else:
             loop = ServeLoop(params, cfg, batch_slots=3, s_max=64)
         rng = np.random.default_rng(0)
@@ -116,6 +128,14 @@ def main():
         if paged and args.kv_dtype != "fp":
             print(f"        kv quant: dtype={loop.kv_spec.dtype} "
                   f"pool_bytes={loop.kv_pool_bytes()}")
+        if paged:
+            ss = loop.sched_stats()
+            mode = "on-demand" if ss["on_demand"] else "reserved"
+            print(f"        scheduler[{mode}]: "
+                  f"peak_live={ss['peak_live_slots']} "
+                  f"preemptions={ss['preemptions']} "
+                  f"resume_tokens={ss['resume_prefill_tokens']} "
+                  f"pool_peak={ss['pool_pages_peak']}pg")
 
 
 if __name__ == "__main__":

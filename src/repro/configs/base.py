@@ -122,6 +122,36 @@ class ArchConfig:
                                  # context) or 'none'; a Drafter
                                  # instance can be passed to the loop
                                  # directly (small-model drafter hook)
+    serve_on_demand_pages: bool = True  # admission covers only the
+                                 # padded prefill; decode pages are
+                                 # allocated lazily at page-boundary
+                                 # crossings (concurrency bounded by
+                                 # the live working set).  False
+                                 # restores worst-case reservation
+                                 # (prompt + max_new up front):
+                                 # exhaustion impossible, concurrency
+                                 # pessimistic
+    serve_preempt_policy: str = "priority"  # victim choice on pool
+                                 # exhaustion (serve/scheduler.py):
+                                 # 'priority' (lowest priority, most
+                                 # pages, least progress) parks the
+                                 # victim for recompute-resume;
+                                 # 'never' raises PoolExhaustedError
+                                 # instead
+    serve_priority_default: int = 0  # admission priority for requests
+                                 # submitted without one (higher =
+                                 # admitted sooner)
+    serve_sched_aging: int = 64  # starvation avoidance: a queued
+                                 # request gains one effective
+                                 # priority level per this many
+                                 # scheduler ticks waited (0 = off)
+    serve_queue_limit: int = 0   # backpressure: submit raises
+                                 # AdmissionError once this many
+                                 # requests queue (0 = unbounded)
+    serve_check_invariants: bool = False  # debug hook: run
+                                 # PageManager/PrefixCache/Scheduler
+                                 # structural checks after every drain
+                                 # step (on in CI and bench smoke)
     serve_shared_act_quant: bool = True  # swiglu wi/wg share one
                                  # activation quantise+pack (wi's
                                  # a_step); disable for checkpoints

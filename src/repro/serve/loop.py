@@ -46,6 +46,11 @@ class Request:
     prompt: np.ndarray            # [S] int32
     max_new_tokens: int = 16
     output: Optional[np.ndarray] = None
+    priority: Optional[int] = None  # paged-loop admission priority
+                                  # (higher = sooner; None = the
+                                  # configured default).  The dense
+                                  # loop is strictly FIFO and ignores
+                                  # it.
 
 
 class ServeLoop:

@@ -44,16 +44,44 @@ Replaces the dense loop's two dominant costs at once:
   writes that would land on a shared page copy-on-write first (fresh
   page + device page copy + block-table swap), so a cached page's
   content is immutable for as long as anything references it.
+- **Concurrency.**  Page accounting at admission is *on-demand* by
+  default (``cfg.serve_on_demand_pages``): admission covers only the
+  padded prefill (minus prefix-cache hits, plus CoW copies), and
+  decode pages are allocated lazily at page-boundary crossings — so
+  concurrency is bounded by the *live working set*, not the sum of
+  worst cases, and a quantised pool's extra slots are actually
+  admissible.  The price is that mid-decode exhaustion becomes a
+  normal event; serve/scheduler.py makes it survivable:
 
-Page accounting at admission reserves pages for the *non-cached*
-blocks only (plus CoW copies of cached blocks the suffix prefill must
-write), then worst-case for ``max_new_tokens`` growth, so decode can
-never hit a mid-flight out-of-pages condition (on-demand growth +
-preemption is a ROADMAP follow-on).  Under pool pressure, admission
-evicts LRU unreferenced cached prefixes before giving up.  Physical
-page 0 is the pool's scratch page: permanently pinned, idle slots'
-decode writes land there and freed rows are reset to it, so a stale
-block-table row can never alias live pages.
+  * ``submit`` is SLO-aware and fails fast with a typed
+    ``AdmissionError`` for requests that can never fit (empty prompt,
+    prompt past ``s_max``, prompt pages past the whole pool) and for
+    backpressure (``cfg.serve_queue_limit``); the queue drains
+    best-first by priority with FIFO among equals and an aging rule
+    so nothing starves.
+  * On exhaustion, the loop preempts a victim slot (lowest priority,
+    then most pages, then least progress): its full pages transfer
+    into the prefix cache (evictable under further pressure — the
+    eviction/preemption interplay), the rest free, and the request is
+    parked with its generated-so-far tokens.
+  * Re-admission *recomputes*: the parked prompt + generated tokens
+    replay through the ordinary chunked-prefill path, whose logits
+    are bit-identical to the decode steps they replace — so a
+    preempt→recompute→resume run emits exactly the tokens an
+    uninterrupted run would, with speculation and quantised KV on.
+    (The prefix-cache transfer usually turns the replay into a
+    cheap suffix prefill.)
+
+  ``cfg.serve_on_demand_pages=False`` restores worst-case reservation
+  (``prompt + max_new`` pages up front): mid-decode exhaustion is
+  impossible by construction, concurrency is pessimistic.
+  Speculative drafts never justify preemption: a draft that cannot
+  get pages is truncated instead (the mandatory one-token write is
+  the only growth worth preempting for).
+
+Physical page 0 is the pool's scratch page: permanently pinned, idle
+slots' decode writes land there and freed rows are reset to it, so a
+stale block-table row can never alias live pages.
 
 Supported families: every block kind must keep a paged-able cache
 (``lm.supports_paged`` — gqa attention, dense or MoE FFN).  Recurrent
@@ -64,6 +92,7 @@ stay on the dense ``ServeLoop``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import List, Optional
 
@@ -75,6 +104,8 @@ from repro.kernels.paged import PageSpec, spec_for
 from repro.models import lm
 from repro.serve.loop import Request
 from repro.serve.prefix_cache import PrefixCache
+from repro.serve.scheduler import (AdmissionError, PoolExhaustedError,
+                                   SchedEntry, Scheduler)
 from repro.serve.spec import make_drafter
 
 
@@ -96,6 +127,7 @@ class PageManager:
         self.allocs = 0      # pages handed out (stats)
         self.frees = 0       # pages returned to the free list (stats)
         self.peak = 0        # peak pages in use
+        self.exhaustions = 0  # allocs that found the pool short (stats)
 
     @property
     def in_use(self) -> int:
@@ -107,6 +139,7 @@ class PageManager:
 
     def alloc(self, n: int) -> Optional[List[int]]:
         if n > len(self.free):
+            self.exhaustions += 1
             return None
         pages = [self.free.popleft() for _ in range(n)]
         for p in pages:
@@ -162,8 +195,10 @@ class PageManager:
 class PagedServeLoop:
     """Slot-based continuous batching over a paged KV cache.
 
-    Greedy decoding; same ``Request`` protocol as the dense loop.
-    ``prefix_cache=None`` follows ``cfg.serve_prefix_cache``."""
+    Greedy decoding; same ``Request`` protocol as the dense loop
+    (plus an optional per-request ``priority`` — higher admits
+    sooner).  ``prefix_cache=None`` follows ``cfg.serve_prefix_cache``;
+    ``on_demand=None`` follows ``cfg.serve_on_demand_pages``."""
 
     def __init__(self, params, cfg, batch_slots: int = 4, s_max: int = 128,
                  eos_id: Optional[int] = None, page_size: int = 16,
@@ -171,7 +206,10 @@ class PagedServeLoop:
                  attn_impl: Optional[str] = None,
                  prefix_cache: Optional[bool] = None,
                  spec_k: Optional[int] = None, drafter=None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None,
+                 on_demand: Optional[bool] = None,
+                 preempt_policy: Optional[str] = None,
+                 check_invariants: Optional[bool] = None):
         if not lm.supports_paged(cfg):
             raise ValueError(
                 f"config {cfg.name!r} has non-pageable block kinds; "
@@ -205,6 +243,20 @@ class PagedServeLoop:
                 "so padded prefills stay within allocatable pages"
             )
         self.pages = PageManager(self.spec.n_pages)
+        self.on_demand = bool(
+            getattr(cfg, "serve_on_demand_pages", True)
+            if on_demand is None else on_demand)
+        # validated eagerly by the Scheduler ctor (bad policy names
+        # should fail construction, not the first exhaustion)
+        self.sched = Scheduler(
+            policy=(preempt_policy if preempt_policy is not None
+                    else getattr(cfg, "serve_preempt_policy", "priority")),
+            aging=getattr(cfg, "serve_sched_aging", 64),
+            default_priority=getattr(cfg, "serve_priority_default", 0))
+        self.queue_limit = int(getattr(cfg, "serve_queue_limit", 0))
+        self.check_invariants = bool(
+            getattr(cfg, "serve_check_invariants", False)
+            if check_invariants is None else check_invariants)
         if prefix_cache is None:
             prefix_cache = getattr(cfg, "serve_prefix_cache", True)
         # construction-time setting: _finish keys its page-transfer
@@ -256,7 +308,6 @@ class PagedServeLoop:
             self.cfg = cfg
         self.caches, _ = lm.init_caches(cfg, batch_slots, s_max,
                                         paged=self.spec)
-        self.queue = deque()
         self.done: List[Request] = []
         self.refills = 0              # mid-decode slot admissions (stats)
         self.prefill_tokens_run = 0   # chunk tokens actually prefilled
@@ -274,6 +325,15 @@ class PagedServeLoop:
                                       # per slot-step, so tokens/step
                                       # is the per-slot amortisation
                                       # factor, not a batching artifact
+        # scheduler / preemption stats (the SLO bench's numbers)
+        self.preemptions = 0          # slots parked on pool exhaustion
+        self.resumes = 0              # parked requests re-admitted
+        self.resume_prefill_tokens = 0  # chunk tokens replayed at resume
+        self.preempted_tokens = 0     # KV positions dropped at preempt
+        self.grown_pages = 0          # on-demand page-boundary allocs
+        self.peak_live_slots = 0      # max concurrently live slots
+        self.ttft_s: List[float] = []       # per-request time-to-first-token
+        self.queue_wait_s: List[float] = []  # per-admission queue wait
 
         # host-side scheduler state (numpy; shipped to device per step)
         self.block_table = np.zeros((batch_slots, self.spec.max_blocks),
@@ -312,45 +372,78 @@ class PagedServeLoop:
     # -- admission ----------------------------------------------------------
 
     def submit(self, req: Request):
-        if not 0 < len(req.prompt) <= self.S_max:
-            raise ValueError(
-                f"prompt length {len(req.prompt)} outside (0, "
-                f"s_max={self.S_max}]"
+        """Enqueue a request, SLO-aware: anything that can *never* be
+        served fails fast here with a typed ``AdmissionError`` (a
+        subclass of ValueError) instead of surfacing later as a shape
+        error or a drain that can never make progress."""
+        L = len(req.prompt)
+        if not 0 < L <= self.S_max:
+            raise AdmissionError(
+                f"prompt length {L} outside (0, s_max={self.S_max}]"
             )
-        self.queue.append(req)
+        usable = self.spec.n_pages - 1
+        if self._prefill_blocks(L) > usable:
+            # not mitigable by the prefix cache: even fully-cached
+            # prompt blocks are distinct physical pages of this pool
+            raise AdmissionError(
+                f"request {req.rid} can never fit: prompt needs "
+                f"{self._prefill_blocks(L)} pages, pool has {usable}"
+            )
+        if self.queue_limit and len(self.sched) >= self.queue_limit:
+            raise AdmissionError(
+                f"backpressure: queue at serve_queue_limit="
+                f"{self.queue_limit}; retry later"
+            )
+        self.sched.push(req, getattr(req, "priority", None))
 
-    def _total_blocks(self, req: Request) -> int:
-        """Block-table entries the request will ever touch: the padded
-        prefill plus decode growth."""
+    def _prefill_blocks(self, L: int) -> int:
+        """Blocks the padded chunk prefill of ``L`` tokens writes."""
         C, P = self.chunk, self.spec.page_size
-        n_chunks = -(-len(req.prompt) // C)
-        # decode writes positions [L, L + max_new - 1); final length is
-        # capped at S_max (the loop finishes a slot at capacity).  The
-        # clamp is s_alloc, not S_max: the padded prefill tail may spill
-        # past S_max within the last allocatable block (the __init__
-        # guard bounds it by s_alloc), and those writes need their page.
-        hi = min(max(n_chunks * C, len(req.prompt) + req.max_new_tokens - 1),
-                 self.spec.s_alloc)
+        return -(-min(-(-L // C) * C, self.spec.s_alloc) // P)
+
+    def _worst_blocks(self, L: int, max_new: int) -> int:
+        """Block-table entries a request of ``L`` tokens could ever
+        touch: the padded prefill plus decode growth.  Decode writes
+        positions [L, L + max_new - 1); final length is capped at
+        S_max (the loop finishes a slot at capacity).  The clamp is
+        s_alloc, not S_max: the padded prefill tail may spill past
+        S_max within the last allocatable block (the __init__ guard
+        bounds it by s_alloc), and those writes need their page."""
+        C, P = self.chunk, self.spec.page_size
+        hi = min(max(-(-L // C) * C, L + max_new - 1), self.spec.s_alloc)
         return -(-hi // P)
 
-    def _plan(self, req: Request, n_cached: int):
+    def _admit_blocks(self, ent: SchedEntry) -> int:
+        """Blocks admission must cover for ``ent``: the padded prefill
+        only (on-demand: decode pages are allocated lazily at
+        page-boundary crossings) or worst-case through the remaining
+        ``max_new`` budget (reserved).  For a resume, ``ent.tokens``
+        already includes the generated tokens and ``ent.out`` has
+        consumed part of the budget — the worst case is the same
+        absolute final position as the uninterrupted run's."""
+        L = len(ent.tokens)
+        if self.on_demand:
+            return self._prefill_blocks(L)
+        return self._worst_blocks(L, ent.req.max_new_tokens - len(ent.out))
+
+    def _plan(self, ent: SchedEntry, n_cached: int):
         """Admission plan given ``n_cached`` matched prefix blocks.
 
         The first position that must still run the forward pass is
-        ``p0 = min(n_cached * P, L - 1)`` — the prompt's last token
-        always reruns (its logits seed decoding), so a fully-cached
-        prompt still prefills its final chunk.  Chunks start on C
-        boundaries, so the first live chunk is ``ci0 = p0 // C``; any
-        *cached* block overlapping the written range ``[ci0*C, ...)``
-        must be copy-on-write duplicated (the recompute rewrites part
-        of it, and positions below ``ci0*C`` inside it are served by
-        the copy).  Returns (total_blocks, ci0, n_keep, n_cow, need):
+        ``p0 = min(n_cached * P, L - 1)`` — the last token always
+        reruns (its logits seed decoding), so a fully-cached prompt
+        still prefills its final chunk.  Chunks start on C boundaries,
+        so the first live chunk is ``ci0 = p0 // C``; any *cached*
+        block overlapping the written range ``[ci0*C, ...)`` must be
+        copy-on-write duplicated (the recompute rewrites part of it,
+        and positions below ``ci0*C`` inside it are served by the
+        copy).  Returns (total_blocks, ci0, n_keep, n_cow, need):
         ``n_keep`` cached blocks stay mapped read-only, ``n_cow`` are
         duplicated, ``need`` fresh pages cover both CoW copies and all
         non-cached blocks."""
         C, P = self.chunk, self.spec.page_size
-        L = len(req.prompt)
-        total = self._total_blocks(req)
+        L = len(ent.tokens)
+        total = self._admit_blocks(ent)
         n_cached = min(n_cached, total)
         p0 = min(n_cached * P, L - 1)
         ci0 = p0 // C
@@ -361,17 +454,24 @@ class PagedServeLoop:
         return total, ci0, n_keep, n_cow, need
 
     def _pages_needed(self, req: Request, n_cached: int = 0) -> int:
-        """Fresh pages admission must allocate.  With a prefix-cache
-        match, already-cached prompt blocks are mapped, not reserved —
-        only non-cached blocks plus CoW copies cost pool pages."""
-        return self._plan(req, n_cached)[4]
+        """Fresh pages admission must allocate for a fresh ``req``.
+        With a prefix-cache match, already-cached blocks are mapped,
+        not reserved — only non-cached blocks plus CoW copies cost
+        pool pages."""
+        return self._plan(self._transient_entry(req), n_cached)[4]
 
-    def _match_blocks(self, req: Request) -> int:
-        """Cached full-page prefix length (blocks) for the queue head,
+    def _transient_entry(self, req: Request) -> SchedEntry:
+        """A throwaway entry for planning/error paths (never queued)."""
+        return SchedEntry(req=req, priority=0, tokens=req.prompt, out=[],
+                          seq=-1, enqueue_tick=0, t_submit=0.0,
+                          t_enqueue=0.0)
+
+    def _match_blocks(self, ent: SchedEntry) -> int:
+        """Cached full-page prefix length (blocks) for an entry,
         without taking references or stats (planning/error paths)."""
         if self.prefix is None:
             return 0
-        return len(self.prefix.match(req.prompt, record=False))
+        return len(self.prefix.match(ent.tokens, record=False))
 
     def _alloc_with_evict(self, n: int) -> Optional[List[int]]:
         """Allocate ``n`` pages, evicting LRU unreferenced cached
@@ -395,18 +495,27 @@ class PagedServeLoop:
         self.cow_copies += 1
 
     def _admit(self, slot_i: int) -> str:
-        """Prefill the queue head into a free slot.  Returns
-        'admitted' (live slot installed), 'finished' (the request
-        completed on its first token — the slot is free again), or
-        'blocked' (empty queue / pool exhausted: FIFO head waits)."""
-        if not self.queue:
+        """Prefill the scheduler's best entry into a free slot.
+        Returns 'admitted' (live slot installed), 'finished' (the
+        request completed on its first token — the slot is free
+        again), or 'blocked' (empty queue / pool exhausted: the best
+        entry waits; lower-priority entries never overtake it).
+
+        A resumed entry's ``tokens`` are prompt + generated-so-far:
+        the replayed chunk prefill recomputes the dropped KV (minus
+        whatever the prefix cache kept from the preemption transfer)
+        and its last-position logits continue the argmax chain
+        bit-identically to the decode step the preemption cut off."""
+        ent = self.sched.peek()
+        if ent is None:
             return "blocked"
-        req = self.queue[0]
+        tokens = ent.tokens
+        L = len(tokens)
         # record=False: a blocked head re-matches every refill round;
         # stats are recorded once per ADMITTED request below
-        hits = self.prefix.match(req.prompt, record=False) \
+        hits = self.prefix.match(tokens, record=False) \
             if self.prefix is not None else []
-        total, ci0, n_keep, n_cow, need = self._plan(req, len(hits))
+        total, ci0, n_keep, n_cow, need = self._plan(ent, len(hits))
         hits = hits[: n_keep + n_cow]
         if hits:
             # hold the matched pages so pressure-eviction (possibly our
@@ -422,13 +531,13 @@ class PagedServeLoop:
             # admits once every slot is free.
             self.pages.release([n.page_id for n in hits])
             hits = []
-            total, ci0, n_keep, n_cow, need = self._plan(req, 0)
+            total, ci0, n_keep, n_cow, need = self._plan(ent, 0)
             page_ids = self._alloc_with_evict(need)
         if page_ids is None:
             return "blocked"              # pool exhausted: request waits
-        self.queue.popleft()
+        self.sched.pop(ent)
+        self.queue_wait_s.append(time.monotonic() - ent.t_enqueue)
         C, P = self.chunk, self.spec.page_size
-        L = len(req.prompt)
         if self.prefix is not None:
             # one lookup record per admitted request (post-fallback:
             # if the cache-less path ran, the cache contributed nothing)
@@ -460,19 +569,28 @@ class PagedServeLoop:
         logits = None
         for ci in range(ci0, n_chunks):
             buf = np.zeros(C, np.int32)
-            seg = req.prompt[ci * C:(ci + 1) * C]
+            seg = tokens[ci * C:(ci + 1) * C]
             buf[: len(seg)] = seg
             last = (L - 1) - ci * C if ci == n_chunks - 1 else 0
             logits, self.caches = self._prefill_chunk(
                 self.params, self.caches, jnp.asarray(buf[None]),
                 jnp.int32(ci * C), bt_row, jnp.int32(last),
             )
-        self.prefill_tokens_run += (n_chunks - ci0) * C
+        run_tokens = (n_chunks - ci0) * C
+        self.prefill_tokens_run += run_tokens
         self.prefill_tokens_saved += ci0 * C
+        if ent.out:
+            # recompute-resume: the replayed suffix is the preemption's
+            # real cost (the SLO bench's recompute-overhead number)
+            self.resumes += 1
+            self.resume_prefill_tokens += run_tokens
         tok0 = int(np.asarray(jnp.argmax(logits)))
+        if not ent.out:
+            self.ttft_s.append(time.monotonic() - ent.t_submit)
         self.lens[slot_i] = L
-        entry = {"req": req, "out": [tok0], "cur": tok0,
-                 "blocks": blocks, "shared": shared}
+        entry = {"req": ent.req, "out": ent.out + [tok0], "cur": tok0,
+                 "blocks": blocks, "shared": shared,
+                 "prio": ent.priority, "sched": ent}
         # L == S_max leaves no room to write a decode token: emit the
         # prefill argmax only, exactly like the dense oracle's capacity
         # guard (decoding anyway would clamp the KV write onto the
@@ -510,6 +628,44 @@ class PagedServeLoop:
         self.lens[slot_i] = 0
         self.slots[slot_i] = None
 
+    def _preempt(self, slot_i: int) -> None:
+        """Park a live slot on pool exhaustion: transfer its full
+        pages into the prefix cache (content-addressed by prompt +
+        generated tokens, so the resume's suffix prefill can map them
+        back read-only — and further pressure can evict them, trading
+        resume cost for pool space), release the rest, and requeue the
+        request with its generated-so-far tokens for recompute-resume."""
+        entry = self.slots[slot_i]
+        ent: SchedEntry = entry["sched"]
+        lens = int(self.lens[slot_i])
+        full = np.concatenate([
+            np.asarray(entry["req"].prompt, np.int32),
+            np.asarray(entry["out"], np.int32),
+        ])
+        assert len(full) == lens + 1, \
+            f"slot {slot_i} token accounting diverged: {len(full)} vs " \
+            f"lens {lens} + 1"
+        blocks = entry["blocks"]
+        # only pages fully covered by written positions [0, lens) hold
+        # canonical KV (beyond sits the padded-prefill tail / rejected
+        # speculative writes): those transfer; the partial tail frees
+        n_full = lens // self.spec.page_size
+        if self._prefix_enabled and self.prefix is not None and n_full:
+            self.prefix.insert(full, blocks[:n_full])
+            rest = blocks[n_full:]
+        else:
+            rest = blocks
+        if len(rest):
+            self.pages.release(list(rest))
+        self.block_table[slot_i] = 0
+        self.lens[slot_i] = 0
+        self.slots[slot_i] = None
+        ent.tokens = full
+        ent.out = list(entry["out"])
+        self.sched.requeue(ent)
+        self.preemptions += 1
+        self.preempted_tokens += lens
+
     def _fill_free_slots(self, mid_decode: bool) -> None:
         """Admit queued requests into every free slot.  A request that
         finishes on its first generated token frees the slot again, so
@@ -527,33 +683,137 @@ class PagedServeLoop:
     def run(self):
         """Process the queue; greedy decoding.  Returns finished
         requests (same contract as the dense loop)."""
-        while self.queue or any(s is not None for s in self.slots):
-            self._fill_free_slots(mid_decode=False)
-            if self.queue and all(s is None for s in self.slots):
+        while self.step():
+            pass
+        return self.done
+
+    def step(self) -> bool:
+        """One scheduling round: admissions into free slots, then at
+        most one decode/verify forward over the live slots (preempting
+        victims first if on-demand growth exhausts the pool), then
+        refill.  Returns True while work remains — an arrival-process
+        driver submits between steps; ``run`` just drains."""
+        self.sched.tick()
+        mid = any(s is not None for s in self.slots)
+        self._fill_free_slots(mid_decode=mid)
+        live = [i for i in range(self.B) if self.slots[i] is not None]
+        self.peak_live_slots = max(self.peak_live_slots, len(live))
+        if not live:
+            if len(self.sched):
                 # every slot is free and eviction has been tried, yet
-                # the head still can't get pages: the pool is simply
-                # too small for this request
-                req = self.queue[0]
-                raise RuntimeError(
-                    f"request {req.rid} needs "
-                    f"{self._pages_needed(req, self._match_blocks(req))} "
+                # the best entry still can't get pages: the pool is
+                # simply too small for this request's plan (reserved
+                # mode; submit already rejects never-fitting prompts)
+                ent = self.sched.peek()
+                raise PoolExhaustedError(
+                    f"request {ent.req.rid} needs "
+                    f"{self._plan(ent, self._match_blocks(ent))[4]} "
                     f"fresh pages; pool has {self.spec.n_pages - 1}"
                 )
-            self._decode_drain()
-        return self.done
+            if self.check_invariants:
+                self._check()
+            return False
+        drafts = self._propose(live)
+        live, drafts = self._reserve_step(live, drafts)
+        freed = True        # every slot preempted => admit next round
+        if live:
+            if any(len(drafts[i]) for i in live):
+                freed = self._verify_once(live, drafts)
+            else:
+                # no slot drafted anything (speculation off, n-gram
+                # miss, or every slot clamped to 0): the cheap [B, 1]
+                # decode shape — a verify window would pad every row
+                freed = self._decode_once(live)
+        if freed:
+            # continuous batching: freed slots admit immediately —
+            # other slots keep decoding, nobody waits for a drain
+            self._fill_free_slots(mid_decode=True)
+            self.peak_live_slots = max(
+                self.peak_live_slots,
+                sum(s is not None for s in self.slots))
+        if self.check_invariants:
+            self._check()
+        return bool(len(self.sched)
+                    or any(s is not None for s in self.slots))
+
+    # -- on-demand growth / preemption ---------------------------------------
+
+    def _grow_to(self, slot_i: int, entry, last_blk: int) -> bool:
+        """Ensure the slot's block table covers block ``last_blk``
+        (on-demand page-boundary growth).  Returns False when the pool
+        (plus evictable prefixes) cannot supply the next page — the
+        caller preempts a victim or truncates the draft."""
+        while len(entry["blocks"]) <= last_blk:
+            pages = self._alloc_with_evict(1)
+            if pages is None:
+                return False
+            b = len(entry["blocks"])
+            entry["blocks"] = np.append(entry["blocks"],
+                                        np.int32(pages[0]))
+            entry["shared"] = np.append(entry["shared"], False)
+            self.block_table[slot_i, b] = pages[0]
+            self.grown_pages += 1
+        return True
+
+    def _reserve_step(self, live: List[int], drafts: dict):
+        """Secure this step's page writes for every live slot,
+        highest-priority first.  The mandatory one-token write is
+        worth preempting for: on exhaustion the policy picks a victim
+        (possibly the needer itself, when it is the least important
+        live work) and parks it.  Speculative drafts are best-effort —
+        a draft that cannot get pages is truncated, never preempted
+        for.  Returns the surviving live set and (possibly truncated)
+        drafts."""
+        P = self.spec.page_size
+        order = sorted(live, key=lambda i: (-self.slots[i]["prio"], i))
+        dropped = set()
+        for i in order:
+            if i in dropped:
+                continue
+            entry = self.slots[i]
+            lens = int(self.lens[i])
+            while not self._grow_to(i, entry, lens // P):
+                cands = [(j, self.slots[j]["prio"],
+                          len(self.slots[j]["blocks"]),
+                          len(self.slots[j]["out"]))
+                         for j in live if j not in dropped]
+                vict = self.sched.select_victim(cands)
+                if vict is None:
+                    raise PoolExhaustedError(
+                        f"pool exhausted growing slot {i} and "
+                        f"serve_preempt_policy="
+                        f"{self.sched.policy!r} allows no victim"
+                    )
+                self._preempt(vict)
+                dropped.add(vict)
+                if vict == i:
+                    break
+            if i in dropped:
+                continue
+            d = drafts.get(i)
+            if d is not None and len(d):
+                while len(d) and not self._grow_to(
+                        i, entry, (lens + len(d)) // P):
+                    # shrink to what the allocated pages can hold; the
+                    # failed grow implies len(d) strictly exceeds fit,
+                    # so this terminates
+                    fit = len(entry["blocks"]) * P - 1 - lens
+                    d = d[: max(0, fit)]
+                drafts[i] = d
+        return [i for i in live if i not in dropped], drafts
 
     def _ensure_writable(self, slot_i: int, entry, blk: int) -> None:
         """Copy-on-write guard before a decode write to block ``blk``.
-        Prompt-prefix sharing alone never routes a decode write onto a
-        shared page (decode writes land at positions >= L, cached
-        blocks end at <= L), but the guard keeps the invariant — no
-        write ever lands on a page with other readers — local and
-        future-proof (e.g. sharing generated pages)."""
+        Prompt/resume prefix sharing alone never routes a decode write
+        onto a shared page (shared blocks end strictly below the first
+        recomputed chunk, decode writes land at positions >= L-1), but
+        the guard keeps the invariant — no write ever lands on a page
+        with other readers — local and future-proof."""
         if blk >= len(entry["shared"]) or not entry["shared"][blk]:
             return
         pages = self._alloc_with_evict(1)
         if pages is None:
-            raise RuntimeError(
+            raise PoolExhaustedError(
                 "pool exhausted during copy-on-write; admission should "
                 "have reserved this page"
             )
@@ -564,36 +824,30 @@ class PagedServeLoop:
         entry["shared"][blk] = False
         self.block_table[slot_i, blk] = dst
 
-    def _decode_drain(self) -> None:
-        while any(s is not None for s in self.slots):
-            live = [i for i in range(self.B) if self.slots[i] is not None]
-            drafts = self._propose(live)
-            if any(len(d) for d in drafts.values()):
-                freed = self._verify_once(live, drafts)
-            else:
-                # no slot drafted anything (speculation off, n-gram
-                # miss, or every slot clamped to 0): the cheap [B, 1]
-                # decode shape — a verify window would pad every row
-                freed = self._decode_once(live)
-            if freed:
-                # continuous batching: freed slots admit immediately —
-                # other slots keep decoding, nobody waits for a drain
-                self._fill_free_slots(mid_decode=True)
+    def _check(self) -> None:
+        """The ``cfg.serve_check_invariants`` debug hook: structural
+        checks after every drain step (page-pool partition, tree
+        consistency, queue sanity) — on in CI and the bench smoke."""
+        self.pages.check()
+        if self.prefix is not None:
+            self.prefix.check()
+        self.sched.check()
 
     # -- speculative decoding ------------------------------------------------
 
     def _draft_cap(self, i: int, entry) -> int:
         """Longest draft slot ``i`` may verify this step.  Bounded by
         ``max_new`` (a full accept must not overshoot the request's
-        budget: ``k`` drafts + 1 bonus <= remaining), by ``S_max``, and
-        by the slot's allocated pages — so every *valid* verify write
-        stays within the positions plain decode would have written
-        (``<= L + max_new - 2``) and admission's page reservation
-        covers speculation with no extra pages."""
+        budget: ``k`` drafts + 1 bonus <= remaining) and by ``S_max``.
+        Reserved mode additionally clamps to the slot's allocated
+        pages — so every *valid* verify write stays within admission's
+        reservation; on-demand mode instead grows (or truncates) in
+        ``_reserve_step``."""
         lens = int(self.lens[i])
         remaining = entry["req"].max_new_tokens - len(entry["out"])
-        room = min(self.S_max,
-                   len(entry["blocks"]) * self.spec.page_size) - 1 - lens
+        alloc_room = (self.S_max if self.on_demand
+                      else len(entry["blocks"]) * self.spec.page_size)
+        room = min(self.S_max, alloc_room) - 1 - lens
         return max(0, min(self.spec_k, remaining - 1, room))
 
     def _propose(self, live: List[int]) -> dict:
@@ -734,6 +988,25 @@ class PagedServeLoop:
             "accept_rate":
                 self.spec_accepted / max(self.spec_proposed, 1),
             "tokens_per_step": self.gen_tokens / max(self.slot_steps, 1),
+        }
+
+    def sched_stats(self) -> dict:
+        """Scheduling/preemption accounting (the SLO bench's numbers):
+        preemption + recompute-resume counters, concurrency and pool
+        high-water marks, and the raw TTFT / queue-wait samples."""
+        return {
+            **self.sched.stats(),
+            "on_demand": self.on_demand,
+            "preemptions": self.preemptions,
+            "resumes": self.resumes,
+            "resume_prefill_tokens": self.resume_prefill_tokens,
+            "preempted_tokens": self.preempted_tokens,
+            "grown_pages": self.grown_pages,
+            "peak_live_slots": self.peak_live_slots,
+            "pool_pages_peak": self.pages.peak,
+            "pool_exhaustions": self.pages.exhaustions,
+            "ttft_s": list(self.ttft_s),
+            "queue_wait_s": list(self.queue_wait_s),
         }
 
     def compiled_shapes(self) -> dict:

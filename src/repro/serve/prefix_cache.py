@@ -38,6 +38,21 @@ Pages are ref-counted by the pool's ``PageManager``:
 The tree never touches device memory itself: nodes store page *ids*;
 the serve loop owns the block tables and the copy-on-write path
 (``models/lm.cache_copy_page``) for pages it must write.
+
+Eviction vs. preemption
+-----------------------
+The tree is also the parking lot for *preempted* slots: on pool
+exhaustion the serve loop inserts a victim's fully-written pages here,
+keyed by prompt + generated-so-far tokens (the key invariant is the
+same — KV at ``p`` is a function of tokens ``[0, p]``, whether those
+tokens came from the prompt or from decoding).  That makes preemption
+two-tier: the parked pages are *evictable-but-resumable*.  If the pool
+stays tight, ``evict`` reclaims them (refcount 1, LRU) and the resume
+pays full recompute through chunked prefill; if pressure relaxes
+first, the resume's ``match`` maps them straight back and the replay
+collapses to a cheap suffix prefill.  No special cases: preemption
+transfer is ``insert``, resume reuse is ``match``/``lock``, and
+pressure reclaim is the ordinary eviction path.
 """
 
 from __future__ import annotations
@@ -127,15 +142,19 @@ class PrefixCache:
 
     # -- insert / merge -----------------------------------------------------
 
-    def insert(self, prompt: Sequence[int], page_ids: Sequence[int]) -> None:
+    def insert(self, prompt: Sequence[int], page_ids: Sequence[int]) -> int:
         """Insert/merge the first ``len(page_ids)`` full pages of
-        ``prompt``.  Ownership of each page reference in ``page_ids``
-        transfers to the tree: a missing node keeps the page (the
-        slot's reference becomes the tree's); an existing node keeps
-        ITS page and the offered one is released (for a page the slot
-        mapped from this very node, that drops the slot's map
-        reference; for a recomputed/CoW duplicate it frees the copy)."""
+        ``prompt`` (any token sequence a slot has actually written —
+        finished prompts, or prompt + generated tokens at preemption).
+        Ownership of each page reference in ``page_ids`` transfers to
+        the tree: a missing node keeps the page (the slot's reference
+        becomes the tree's); an existing node keeps ITS page and the
+        offered one is released (for a page the slot mapped from this
+        very node, that drops the slot's map reference; for a
+        recomputed/CoW duplicate it frees the copy).  Returns the
+        number of NEW nodes created (0 = everything deduplicated)."""
         node = self.root
+        new = 0
         for i, pid in enumerate(page_ids):
             key = self._page_key(prompt, i)
             child = node.children.get(key)
@@ -144,6 +163,7 @@ class PrefixCache:
                 node.children[key] = child
                 self.n_nodes += 1
                 self.inserted += 1
+                new += 1
             else:
                 self.pages.release([int(pid)])
                 self.deduped += 1
@@ -151,6 +171,7 @@ class PrefixCache:
             node = child
         if self.max_pages and self.n_nodes > self.max_pages:
             self.evict(self.n_nodes - self.max_pages)
+        return new
 
     # -- eviction -----------------------------------------------------------
 

@@ -1,0 +1,198 @@
+"""SLO-aware admission queue + preemption policy for the paged loop.
+
+The paper's core move is treating a fixed soft-logic budget as the
+binding constraint and engineering the mapping/scheduling around it;
+the serving analogue is the fixed KV page pool.  Once admission stops
+reserving worst-case pages (``cfg.serve_on_demand_pages``), mid-decode
+pool exhaustion becomes a *normal* event rather than an impossibility,
+and this module supplies the machinery that makes it survivable:
+
+- **Typed admission errors.**  ``AdmissionError`` fails a ``submit``
+  fast (empty prompt, prompt past ``s_max``, prompt pages past the
+  whole pool, backpressure queue limit) instead of surfacing later as
+  a shape error or a serve loop that can never drain.
+  ``PoolExhaustedError`` is the runtime counterpart: the pool cannot
+  cover even a lone request's growth and no victim exists.
+- **Priority queue with aging.**  ``submit`` order is a *hint*; the
+  queue is drained best-first by ``priority`` (higher = sooner), with
+  FIFO among equals and a starvation-avoidance aging rule: an entry
+  waiting ``aging`` scheduler ticks gains one effective priority
+  level, so a steady stream of high-priority arrivals can delay but
+  never permanently starve a low-priority request.
+- **Preemption victims.**  On exhaustion the loop asks
+  ``select_victim`` to pick the live slot to park: lowest priority
+  first, then most pages held (frees the most), then least progress
+  (wastes the least generated work).  ``policy='never'`` disables
+  preemption — exhaustion then raises ``PoolExhaustedError``.
+- **Recompute-resume bookkeeping.**  A preempted slot is parked as a
+  ``SchedEntry`` whose ``tokens`` hold the prompt *plus every token
+  generated so far*; re-admission replays them through the ordinary
+  chunked-prefill path (bit-identical to the decode steps it replaces
+  — the chunk and decode attention entry points compute the same
+  masked contraction), so a resumed request continues exactly where an
+  uninterrupted run would be.  The entry keeps the original submit
+  time (TTFT is measured from first submission) and a preemption
+  count.
+
+The scheduler is pure host-side metadata — a few dozen entries scanned
+per admission round; never the hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+
+class AdmissionError(ValueError):
+    """A request that can never be served as submitted: reject at
+    ``submit`` (fail fast) rather than hang or crash the drain."""
+
+
+class PoolExhaustedError(RuntimeError):
+    """The page pool cannot cover required growth and no preemption
+    victim exists (or ``serve_preempt_policy='never'`` forbids one)."""
+
+
+@dataclasses.dataclass
+class SchedEntry:
+    """One queued unit of work: a fresh request, or a preempted one
+    parked for recompute-resume.
+
+    ``tokens`` is what admission prefills — the prompt for a fresh
+    request; prompt + generated-so-far for a resume (the last token's
+    chunk logits then seed decoding exactly where the preempted run
+    stopped).  ``out`` carries the tokens already emitted so finish
+    accounting (``max_new_tokens``, eos) spans the interruption."""
+
+    req: object                  # serve.loop.Request
+    priority: int
+    tokens: object               # np.ndarray [L] int32
+    out: List[int]
+    seq: int                     # FIFO tiebreak among equal priority
+    enqueue_tick: int            # scheduler tick at (re-)enqueue (aging)
+    t_submit: float              # original submit time (TTFT anchor)
+    t_enqueue: float             # latest enqueue time (queue-wait stats)
+    preemptions: int = 0
+
+
+class Scheduler:
+    """Priority-ordered admission queue + preemption victim policy."""
+
+    POLICIES = ("priority", "never")
+
+    def __init__(self, policy: str = "priority", aging: int = 64,
+                 default_priority: int = 0):
+        if policy not in self.POLICIES:
+            raise ValueError(
+                f"serve_preempt_policy {policy!r} not in {self.POLICIES}")
+        self.policy = policy
+        self.aging = int(aging)
+        self.default_priority = int(default_priority)
+        self._q: List[SchedEntry] = []
+        self._seq = 0
+        self.ticks = 0
+        # stats
+        self.submitted = 0
+        self.requeued = 0        # preemption re-entries
+        self.peak_queue = 0
+
+    # -- queue --------------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def push(self, req, priority: Optional[int] = None) -> SchedEntry:
+        """Enqueue a fresh request (``priority=None`` takes the
+        configured default)."""
+        prio = self.default_priority if priority is None else int(priority)
+        now = time.monotonic()
+        ent = SchedEntry(req=req, priority=prio, tokens=req.prompt,
+                         out=[], seq=self._seq, enqueue_tick=self.ticks,
+                         t_submit=now, t_enqueue=now)
+        self._seq += 1
+        self._q.append(ent)
+        self.submitted += 1
+        self.peak_queue = max(self.peak_queue, len(self._q))
+        return ent
+
+    def requeue(self, ent: SchedEntry) -> None:
+        """Re-enqueue a preempted entry for recompute-resume.  It keeps
+        its priority and original submit time but takes a fresh seq —
+        behind same-priority FIFO peers — and a fresh aging clock."""
+        ent.seq = self._seq
+        self._seq += 1
+        ent.enqueue_tick = self.ticks
+        ent.t_enqueue = time.monotonic()
+        ent.preemptions += 1
+        self._q.append(ent)
+        self.requeued += 1
+        self.peak_queue = max(self.peak_queue, len(self._q))
+
+    def tick(self) -> None:
+        """One scheduling round (the aging clock)."""
+        self.ticks += 1
+
+    def effective_priority(self, ent: SchedEntry) -> int:
+        """Priority plus the aging boost earned while waiting."""
+        if self.aging <= 0:
+            return ent.priority
+        return ent.priority + (self.ticks - ent.enqueue_tick) // self.aging
+
+    def peek(self) -> Optional[SchedEntry]:
+        """Best admission candidate: highest effective priority, FIFO
+        among equals.  Strictly best-first — a blocked best entry is
+        never bypassed by a smaller lower-priority one (no head-of-line
+        overtaking; aging bounds how long anything waits)."""
+        if not self._q:
+            return None
+        return max(self._q,
+                   key=lambda e: (self.effective_priority(e), -e.seq))
+
+    def pop(self, ent: SchedEntry) -> None:
+        self._q.remove(ent)
+
+    # -- preemption ---------------------------------------------------------
+
+    def select_victim(
+        self, candidates: Iterable[Tuple[int, int, int, int]],
+    ) -> Optional[int]:
+        """Pick the live slot to preempt from ``(slot, priority, pages,
+        progress)`` tuples: lowest priority, then most pages held (the
+        park frees the most pool), then least progress (least generated
+        work to recompute), then the latest-admitted slot.  Returns the
+        slot id, or None when the policy forbids preemption or there
+        are no candidates."""
+        cands = list(candidates)
+        if self.policy == "never" or not cands:
+            return None
+        return min(cands, key=lambda c: (c[1], -c[2], c[3], -c[0]))[0]
+
+    # -- introspection ------------------------------------------------------
+
+    def queued(self) -> Sequence[SchedEntry]:
+        return tuple(self._q)
+
+    def stats(self) -> dict:
+        return {
+            "policy": self.policy,
+            "aging": self.aging,
+            "queued": len(self._q),
+            "submitted": self.submitted,
+            "requeued": self.requeued,
+            "peak_queue": self.peak_queue,
+            "ticks": self.ticks,
+        }
+
+    def check(self) -> None:
+        """Structural invariants (the ``serve_check_invariants`` hook):
+        unique seqs, non-negative waits, no entry enqueued in the
+        future."""
+        seqs = [e.seq for e in self._q]
+        assert len(set(seqs)) == len(seqs), "duplicate scheduler seq"
+        for e in self._q:
+            assert e.enqueue_tick <= self.ticks, "entry from the future"
+            assert len(e.tokens) > 0, "empty entry in queue"
+            assert len(e.out) < getattr(e.req, "max_new_tokens", 1 << 30), \
+                "finished entry still queued"

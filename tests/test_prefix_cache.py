@@ -336,8 +336,12 @@ def test_own_hits_pinning_pool_falls_back_cacheless(served):
     cfg, params = served
     rng = np.random.default_rng(4)
     prompt = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+    # on_demand=False: the scenario needs worst-case reservation to
+    # exhaust the pool AT ADMISSION (on-demand admission covers only
+    # the prefill and never trips the locked-hits pinning case here)
     loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=32,
-                          page_size=8, chunk=8, n_pages=5)
+                          page_size=8, chunk=8, n_pages=5,
+                          on_demand=False)
     loop.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
     loop.submit(Request(rid=1, prompt=prompt.copy(), max_new_tokens=4))
     done = {r.rid: r for r in loop.run()}
@@ -356,8 +360,11 @@ def test_admission_reserves_fewer_pages_on_prefix_hits(served):
     cfg, params = served
     rng = np.random.default_rng(5)
     prompt = rng.integers(0, cfg.vocab, 24).astype(np.int32)
+    # on_demand=False: the reserved-mode accounting is exactly what
+    # this test pins down (_pages_needed covers prompt + max_new)
     loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=32,
-                          page_size=8, chunk=8, n_pages=7)
+                          page_size=8, chunk=8, n_pages=7,
+                          on_demand=False)
     req = Request(rid=0, prompt=prompt, max_new_tokens=4)
     assert loop._pages_needed(req) == 4          # worst case: no cache
     assert loop._pages_needed(req, n_cached=3) == 2   # keep 2, CoW 1

@@ -1,0 +1,362 @@
+"""Scheduling, preemption, and backpressure (this PR's tentpole
+surface: serve/scheduler.py + the on-demand paged admission path).
+
+Three contracts:
+
+- **Fail fast, typed.**  A submit that can never be served raises
+  ``AdmissionError`` at submit time — empty prompt, prompt past
+  ``s_max`` (previously a downstream shape/capacity error), prompt
+  pages past the whole pool (previously an un-drainable ``run()``),
+  and the ``serve_queue_limit`` backpressure bound.
+- **Preempt -> recompute -> resume is invisible to the math.**  Under
+  a pool sized to force mid-decode preemptions, every output must be
+  BIT-IDENTICAL to the solo dense oracle — greedy and speculative, fp
+  and int8 KV — while the compile set stays at its usual three forward
+  shapes and no page leaks (``free + in_use`` partition).
+- **On-demand admission buys real concurrency.**  At a fixed pool
+  budget, admitting by prefill footprint instead of worst case must
+  lift peak live slots by >= 1.5x on a decode-heavy workload (the
+  BENCH gate, asserted here at test scale too).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - fallback sweep
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs import smoke_config
+from repro.models import lm
+from repro.serve.loop import Request, ServeLoop
+from repro.serve.paged import PagedServeLoop
+from repro.serve.scheduler import (AdmissionError, PoolExhaustedError,
+                                   Scheduler)
+
+S_MAX = 48
+# mixed lengths spanning page/chunk boundaries; max_new long enough
+# that decode crosses several page boundaries (on-demand growth and
+# preemption both actually engage)
+LENGTHS = (6, 11, 3, 9, 5)
+MAX_NEW = (12, 10, 8, 11, 9)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    return cfg, params
+
+
+def _workload(cfg):
+    rng = np.random.default_rng(7)
+    return [(rng.integers(0, cfg.vocab, n).astype(np.int32), mn)
+            for n, mn in zip(LENGTHS, MAX_NEW)]
+
+
+_oracle_cache: dict = {}
+
+
+def _oracle(params, cfg, kv="fp"):
+    """Solo dense-loop output per request, cached per KV dtype (the
+    uninterrupted run every preempted run must reproduce exactly)."""
+    if kv not in _oracle_cache:
+        c = dataclasses.replace(cfg, serve_kv_dtype=kv)
+        solo = ServeLoop(params, c, batch_slots=1, s_max=S_MAX)
+        for i, (p, mn) in enumerate(_workload(cfg)):
+            solo.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn))
+            solo.run()
+        _oracle_cache[kv] = {r.rid: r.output for r in solo.done}
+    return _oracle_cache[kv]
+
+
+def _submit_all(loop, cfg, priorities=None, order=None):
+    reqs = _workload(cfg)
+    idx = list(order) if order is not None else list(range(len(reqs)))
+    for i in idx:
+        p, mn = reqs[i]
+        prio = priorities[i] if priorities is not None else None
+        loop.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn,
+                            priority=prio))
+
+
+# -- typed fail-fast admission (satellite: both old failure modes) ----------
+
+def test_submit_empty_prompt_typed(served):
+    cfg, params = served
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=S_MAX,
+                          page_size=8, chunk=8)
+    with pytest.raises(AdmissionError, match="outside"):
+        loop.submit(Request(rid=0, prompt=np.zeros(0, np.int32)))
+
+
+def test_submit_oversized_prompt_typed(served):
+    """Regression: a prompt past s_max used to surface as a downstream
+    error; now it is a typed AdmissionError at submit (still a
+    ValueError subclass, so legacy handlers keep working)."""
+    cfg, params = served
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=S_MAX,
+                          page_size=8, chunk=8)
+    with pytest.raises(AdmissionError, match="outside"):
+        loop.submit(Request(rid=0, prompt=np.zeros(S_MAX + 1, np.int32)))
+    assert issubclass(AdmissionError, ValueError)
+    assert len(loop.sched) == 0          # nothing half-enqueued
+
+
+def test_submit_pool_never_fits_typed(served):
+    """Regression: a prompt whose pages exceed the whole pool used to
+    block run() forever (the head could never admit); now submit
+    rejects it immediately and run() still drains an empty queue."""
+    cfg, params = served
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=S_MAX,
+                          page_size=8, chunk=8, n_pages=3)   # 2 usable
+    prompt = np.ones(40, np.int32)                           # 5 pages
+    with pytest.raises(AdmissionError, match="never fit"):
+        loop.submit(Request(rid=0, prompt=prompt))
+    assert loop.run() == []              # queue empty: clean no-op drain
+
+
+def test_submit_backpressure_queue_limit(served):
+    cfg, params = served
+    c = dataclasses.replace(cfg, serve_queue_limit=2)
+    loop = PagedServeLoop(params, c, batch_slots=1, s_max=S_MAX,
+                          page_size=8, chunk=8)
+    reqs = _workload(cfg)
+    loop.submit(Request(rid=0, prompt=reqs[0][0].copy()))
+    loop.submit(Request(rid=1, prompt=reqs[1][0].copy()))
+    with pytest.raises(AdmissionError, match="backpressure"):
+        loop.submit(Request(rid=2, prompt=reqs[2][0].copy()))
+    assert len(loop.sched) == 2          # the overflow was not enqueued
+
+
+# -- preempt -> recompute -> resume bit-exactness (acceptance matrix) --------
+
+@pytest.mark.parametrize("kv", ["fp", "int8"])
+@pytest.mark.parametrize("spec_k", [0, 3], ids=["greedy", "spec"])
+def test_preempt_resume_bitexact_vs_oracle(served, spec_k, kv):
+    """A pool of 7 usable pages against five requests whose working
+    sets sum past it: mid-decode preemptions are forced, every parked
+    request resumes via chunked-prefill recompute, and the final
+    outputs must match an uninterrupted solo dense run bit-for-bit —
+    with speculation and KV quantisation composed in, on the usual
+    three-forward-shape compile set, leak-free."""
+    cfg, params = served
+    c = dataclasses.replace(cfg, serve_kv_dtype=kv)
+    want = _oracle(params, cfg, kv)
+    loop = PagedServeLoop(params, c, batch_slots=4, s_max=S_MAX,
+                          page_size=8, chunk=8, n_pages=8, spec_k=spec_k,
+                          check_invariants=True)
+    _submit_all(loop, cfg)
+    done = {r.rid: r.output for r in loop.run()}
+    assert set(done) == set(want)
+    for rid in want:
+        assert np.array_equal(done[rid], want[rid]), \
+            (kv, spec_k, rid, done[rid], want[rid])
+    ss = loop.sched_stats()
+    assert ss["preemptions"] >= 1, "pool never exhausted: gate is vacuous"
+    assert ss["resumes"] == ss["preemptions"]   # nobody starved
+    assert ss["resume_prefill_tokens"] > 0      # recompute actually ran
+    loop.check_compiled()
+    loop.pages.check()
+
+
+def test_preempted_pages_feed_prefix_cache(served):
+    """Preemption transfers the victim's full pages into the radix
+    tree (keyed by prompt + generated tokens), so a resume that finds
+    them still cached collapses to a suffix prefill — strictly fewer
+    replayed chunk tokens than cache-less recompute would need."""
+    cfg, params = served
+    loop = PagedServeLoop(params, cfg, batch_slots=4, s_max=S_MAX,
+                          page_size=8, chunk=8, n_pages=8,
+                          check_invariants=True)
+    _submit_all(loop, cfg)
+    loop.run()
+    assert loop.preemptions >= 1
+    # the transfer happened: tree gained nodes beyond finished-prompt
+    # inserts alone would explain is hard to pin exactly, but the
+    # cheap-resume effect is directly observable — cached blocks were
+    # matched and chunk tokens skipped
+    assert loop.prefix.stats()["inserted"] > 0
+    assert loop.prefill_tokens_saved > 0
+    loop.pages.check()
+    loop.prefix.check()
+
+
+def test_no_leaks_after_preemption_churn(served):
+    """free + in_use partition after a preemption-heavy drain: once
+    the tree is stripped, every page is back on the free list."""
+    cfg, params = served
+    loop = PagedServeLoop(params, cfg, batch_slots=4, s_max=S_MAX,
+                          page_size=8, chunk=8, n_pages=8,
+                          check_invariants=True)
+    _submit_all(loop, cfg)
+    loop.run()
+    assert loop.preemptions >= 1
+    loop.prefix.evict(10 ** 6)
+    assert loop.pages.in_use == 0
+    loop.pages.check()
+
+
+# -- concurrency: on-demand vs reserved (the BENCH/CI gate, test-scale) ------
+
+def test_on_demand_lifts_concurrency(served):
+    """Same pool, same workload: worst-case reservation caps live
+    slots far below what on-demand admission achieves (the 1.5x CI
+    gate).  Outputs must agree bit-for-bit between the two modes."""
+    cfg, params = served
+    peaks, outs = {}, {}
+    for mode in (False, True):
+        loop = PagedServeLoop(params, cfg, batch_slots=6, s_max=S_MAX,
+                              page_size=8, chunk=8, n_pages=7,
+                              on_demand=mode, check_invariants=True)
+        _submit_all(loop, cfg)
+        outs[mode] = {r.rid: r.output for r in loop.run()}
+        peaks[mode] = loop.sched_stats()["peak_live_slots"]
+        loop.pages.check()
+    # 6 usable pages: reserved needs ceil((L+max_new-1)/8) = 2-3 pages
+    # per request -> two requests exhaust the budget (peak 2);
+    # on-demand admission covers 1-2 prefill pages -> 4 slots go live
+    # before the first page-boundary crossing forces preemptions
+    assert peaks[True] >= 1.5 * peaks[False], peaks
+    for rid in outs[True]:
+        assert np.array_equal(outs[True][rid], outs[False][rid])
+
+
+def test_reserved_mode_never_preempts(served):
+    cfg, params = served
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=S_MAX,
+                          page_size=8, chunk=8, on_demand=False,
+                          check_invariants=True)
+    _submit_all(loop, cfg)
+    done = {r.rid: r.output for r in loop.run()}
+    want = _oracle(params, cfg)
+    for rid in want:
+        assert np.array_equal(done[rid], want[rid])
+    assert loop.preemptions == 0
+    assert loop.grown_pages == 0
+
+
+# -- priority / policy ------------------------------------------------------
+
+def test_priority_orders_admission(served):
+    """One slot: the higher-priority request admits (and finishes)
+    first even though it was submitted last."""
+    cfg, params = served
+    loop = PagedServeLoop(params, cfg, batch_slots=1, s_max=S_MAX,
+                          page_size=8, chunk=8)
+    reqs = _workload(cfg)
+    loop.submit(Request(rid=0, prompt=reqs[0][0].copy(), max_new_tokens=4,
+                        priority=-1))
+    loop.submit(Request(rid=1, prompt=reqs[1][0].copy(), max_new_tokens=4,
+                        priority=5))
+    assert [r.rid for r in loop.run()] == [1, 0]
+
+
+def test_policy_never_raises_on_exhaustion(served):
+    cfg, params = served
+    loop = PagedServeLoop(params, cfg, batch_slots=4, s_max=S_MAX,
+                          page_size=8, chunk=8, n_pages=8,
+                          preempt_policy="never")
+    _submit_all(loop, cfg)
+    with pytest.raises(PoolExhaustedError):
+        loop.run()
+
+
+def test_bad_policy_fails_construction(served):
+    cfg, params = served
+    with pytest.raises(ValueError, match="serve_preempt_policy"):
+        PagedServeLoop(params, cfg, batch_slots=1, s_max=S_MAX,
+                       page_size=8, chunk=8, preempt_policy="typo")
+
+
+# -- scheduler unit tests (pure host, no model) -----------------------------
+
+def test_scheduler_fifo_within_priority():
+    s = Scheduler(aging=0)
+    a = s.push(Request(rid=0, prompt=np.ones(4, np.int32)))
+    b = s.push(Request(rid=1, prompt=np.ones(4, np.int32)))
+    assert s.peek() is a
+    s.pop(a)
+    assert s.peek() is b
+
+
+def test_scheduler_aging_prevents_starvation():
+    """A low-priority entry waiting long enough overtakes a fresh
+    high-priority one: aging bounds every request's wait."""
+    s = Scheduler(aging=4)
+    lo = s.push(Request(rid=0, prompt=np.ones(4, np.int32)), priority=0)
+    for _ in range(12):
+        s.tick()
+    hi = s.push(Request(rid=1, prompt=np.ones(4, np.int32)), priority=2)
+    assert s.effective_priority(lo) == 3 > s.effective_priority(hi)
+    assert s.peek() is lo
+    s.requeue(lo)                        # fresh aging clock
+    assert s.effective_priority(lo) == 0
+    assert s.peek() is hi
+
+
+def test_scheduler_victim_policy():
+    s = Scheduler()
+    # (slot, priority, pages, progress): lowest priority first...
+    assert s.select_victim([(0, 1, 9, 0), (1, 0, 1, 9)]) == 1
+    # ...then most pages held...
+    assert s.select_victim([(0, 0, 2, 5), (1, 0, 6, 5)]) == 1
+    # ...then least progress, then latest slot
+    assert s.select_victim([(0, 0, 4, 7), (1, 0, 4, 2)]) == 1
+    assert s.select_victim([(0, 0, 4, 2), (1, 0, 4, 2)]) == 1
+    assert s.select_victim([]) is None
+    assert Scheduler(policy="never").select_victim([(0, 0, 1, 0)]) is None
+
+
+def test_invariant_hook_runs_every_step(served):
+    """cfg.serve_check_invariants wires the structural checks into
+    every drain step (not just test teardown)."""
+    cfg, params = served
+    c = dataclasses.replace(cfg, serve_check_invariants=True)
+    loop = PagedServeLoop(params, c, batch_slots=2, s_max=S_MAX,
+                          page_size=8, chunk=8)
+    assert loop.check_invariants
+    calls = []
+    orig = loop._check
+    loop._check = lambda: (calls.append(1), orig())
+    reqs = _workload(cfg)
+    loop.submit(Request(rid=0, prompt=reqs[0][0].copy(), max_new_tokens=4))
+    loop.run()
+    assert len(calls) >= 2               # once per step, incl. the drain
+
+
+# -- fault-injection fuzz (satellite) ---------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(
+    n_pages=st.integers(min_value=8, max_value=14),
+    seed=st.integers(min_value=0, max_value=10_000),
+    spec_k=st.sampled_from([0, 3]),
+)
+def test_fuzz_preemption_bitexact_and_leakfree(served, n_pages, seed, spec_k):
+    """Fault injection: shrink the pool, shuffle submit order, inject
+    high-priority bursts (forcing victims mid-decode at arbitrary
+    points).  Whatever the schedule, every output stays bit-exact vs
+    the solo dense oracle and the page partition holds."""
+    cfg, params = served
+    want = _oracle(params, cfg)
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(LENGTHS))
+    priorities = [int(p) for p in rng.integers(-2, 3, len(LENGTHS))]
+    loop = PagedServeLoop(params, cfg, batch_slots=4, s_max=S_MAX,
+                          page_size=8, chunk=8, n_pages=n_pages,
+                          spec_k=spec_k, check_invariants=True)
+    _submit_all(loop, cfg, priorities=priorities, order=order)
+    done = {r.rid: r.output for r in loop.run()}
+    assert set(done) == set(want)
+    for rid in want:
+        assert np.array_equal(done[rid], want[rid]), \
+            (n_pages, seed, spec_k, rid)
+    loop.check_compiled()
+    loop.pages.check()
+    loop.prefix.evict(10 ** 6)
+    assert loop.pages.in_use == 0        # free + in_use partition holds
