@@ -1,8 +1,12 @@
 """Shared benchmark utilities: a trained-like quantised ResNet-18 whose
-weight statistics mirror the paper's (Fig. 5 redundancy), timers, CSV."""
+weight statistics mirror the paper's (Fig. 5 redundancy), timers, CSV,
+and run provenance for the BENCH_*.json artifacts."""
 
 from __future__ import annotations
 
+import datetime
+import platform
+import subprocess
 import time
 
 import numpy as np
@@ -80,3 +84,56 @@ def ab_ratio(fn_a, fn_b, reps=25):
 
 def csv_row(*cols):
     print(",".join(str(c) for c in cols), flush=True)
+
+
+def provenance() -> dict:
+    """Environment stamp for a BENCH_*.json artifact: git sha, library
+    versions, platform, UTC timestamp.  A benchmark number without this
+    block is unreviewable — two artifacts can only be compared when
+    their provenance says they ran the same code on comparable boxes.
+    Never raises: fields degrade to 'unknown' outside a git checkout."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=False,
+        ).stdout.strip() or "unknown"
+    except OSError:
+        sha = "unknown"
+    try:
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10, check=False,
+        ).stdout.strip())
+    except OSError:
+        dirty = False
+    import jax
+    return {
+        "git_sha": sha,
+        "git_dirty": dirty,
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "tier1_tests": _tier1_test_count(),
+    }
+
+
+def _tier1_test_count() -> int:
+    """Static count of tier-1 test functions (``def test_*`` across
+    tests/): ties each artifact to the coverage that guarded it without
+    paying a pytest collection pass inside every bench run."""
+    import pathlib
+    import re
+
+    root = pathlib.Path(__file__).resolve().parent.parent / "tests"
+    n = 0
+    for p in sorted(root.glob("test_*.py")):
+        try:
+            n += len(re.findall(r"^def test_", p.read_text(), re.M))
+        except OSError:
+            pass
+    return n

@@ -14,6 +14,15 @@ headline ``speedup_auto_vs_xla`` is measured with interleaved A/B reps
 (common.ab_ratio) so shared-runner load noise cancels.  ``run(json_path
 =...)`` emits machine-readable ``BENCH_kernels.json`` so the perf
 trajectory is tracked across PRs.
+
+The **roofline scenario** records bytes-moved for the two serving hot
+kernels — the fused TLMAC megakernel and the paged flash-decode — as
+(a) a compulsory-traffic model (each operand/output touched exactly
+once; for flash decode only the LIVE pages count, the block table's
+whole point) and (b) XLA's measured ``bytes accessed`` from compiled
+cost analysis.  The ratio is the kernel's traffic multiplier over the
+roofline floor: the number the paper's scalability argument budgets
+against, now tracked per PR in BENCH_kernels.json.
 """
 
 from __future__ import annotations
@@ -21,10 +30,11 @@ from __future__ import annotations
 import json
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import ab_ratio, csv_row, timer
+from benchmarks.common import ab_ratio, csv_row, provenance, timer
 from repro.core.tlmac import compile_layer
 from repro.kernels import autotune, ops
 
@@ -35,6 +45,80 @@ BATCHES = {"decode": 8, "prefill": 64}
 # wall-clock on a row that never wins.  It stays dispatchable via an
 # explicit impl= (and joins via REPRO_TLMAC_BENCH_ONEHOT=1).
 IMPLS = ("auto", "xla", "xla-kscan", "xla-flat", "pallas", "fused")
+
+
+def _measured_bytes(fn, *args) -> float:
+    """XLA's ``bytes accessed`` for one compiled call of ``fn`` (CPU
+    cost analysis returns a list of per-computation dicts)."""
+    ca = jax.jit(fn).lower(*args).compile().cost_analysis()
+    d = ca[0] if isinstance(ca, (list, tuple)) else ca
+    return float(d.get("bytes accessed", float("nan")))
+
+
+def _model_bytes(fn, *args) -> int:
+    """Compulsory-traffic floor: every operand read once, every output
+    written once — the roofline denominator."""
+    out = jax.eval_shape(fn, *args)
+    return int(sum(x.nbytes for x in args)
+               + sum(o.size * o.dtype.itemsize
+                     for o in jax.tree.leaves(out)))
+
+
+def _roofline(plan, B_a, G, K, N, quiet):
+    """Bytes-moved accounting for the two serving hot kernels (module
+    docstring): model floor vs measured, per kernel."""
+    from repro.kernels.flash_decode import flash_decode
+
+    rng = np.random.default_rng(2)
+    doc = {}
+
+    # -- TLMAC megakernel (fused lookup GEMM), decode batch --
+    a = jnp.asarray(rng.integers(0, 2**B_a, size=(BATCHES["decode"], K)))
+    t = jnp.asarray(plan.table)
+    e = jnp.asarray(plan.exec_idx)
+    c = jnp.asarray(plan.step_cluster)
+    fn = lambda a_, t_, e_, c_: ops.tlmac_matmul(
+        a_, t_, e_, c_, B_a=B_a, G=G, N=N, impl="fused")
+    model = _model_bytes(fn, a, t, e, c)
+    meas = _measured_bytes(fn, a, t, e, c)
+    doc["tlmac_megakernel"] = {
+        "model_bytes": model, "measured_bytes": meas,
+        "traffic_ratio": meas / model,
+    }
+
+    # -- paged flash-decode at uneven per-slot lengths --
+    B, KV, rep, hd, P, MB = 4, 2, 4, 64, 16, 8
+    n_pages = B * MB + 1
+    kp = jnp.asarray(rng.normal(size=(n_pages, P, KV, hd)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, P, KV, hd)), jnp.float32)
+    bt = jnp.asarray(np.stack(
+        [1 + b * MB + np.arange(MB) for b in range(B)]).astype(np.int32))
+    q = jnp.asarray(rng.normal(size=(B, KV, rep, hd)), jnp.float32)
+    lens = np.array([24, 70, 128, 9], np.int32)
+    fd = lambda q_, kp_, vp_, bt_, l_: flash_decode(
+        q_, kp_, vp_, bt_, l_, n_splits=2, interpret=True)
+    largs = (q, kp, vp, bt, jnp.asarray(lens))
+    # the model floor counts only LIVE pages' K/V traffic — the block
+    # table's decoupling of capacity from traffic is the claim
+    live_pages = int(sum(-(-int(l) // P) for l in lens))
+    page_bytes = P * KV * hd * 4
+    out_sh = jax.eval_shape(fd, *largs)
+    model = int(q.nbytes + 2 * live_pages * page_bytes + bt.nbytes
+                + lens.nbytes
+                + sum(o.size * o.dtype.itemsize
+                      for o in jax.tree.leaves(out_sh)))
+    meas = _measured_bytes(fd, *largs)
+    doc["paged_flash_decode"] = {
+        "model_bytes": model, "measured_bytes": meas,
+        "traffic_ratio": meas / model,
+        "live_pages": live_pages, "total_pages": n_pages,
+    }
+    if not quiet:
+        csv_row("roofline", "model_bytes", "measured_bytes", "ratio")
+        for k, v in doc.items():
+            csv_row(k, v["model_bytes"], f"{v['measured_bytes']:.0f}",
+                    f"{v['traffic_ratio']:.2f}x")
+    return doc
 
 
 def run(quiet=False, json_path=None):
@@ -91,6 +175,8 @@ def run(quiet=False, json_path=None):
             for k, v in us.items():
                 csv_row(f"{k}[{label} M={M}]", f"{v:.0f}")
             csv_row(f"speedup_auto_vs_xla[{label}]", f"{speedup:.2f}x")
+    roofline = _roofline(plan, B_a, G, K, N, quiet)
+    out["roofline"] = roofline
     if json_path:
         cfgs = {}
         for label, M in BATCHES.items():
@@ -100,10 +186,12 @@ def run(quiet=False, json_path=None):
             )
             cfgs[label] = autotune.lookup(key)
         doc = {
+            "provenance": provenance(),
             "shape": BENCH_SHAPE,
             "batches": BATCHES,
             "us_per_call": out["us_per_call"],
             "speedup_auto_vs_xla": out["speedup_auto_vs_xla"],
+            "roofline": roofline,
             "auto_config": cfgs,
             # no absolute cache path here: the artifact is git-tracked
             # and machine-local paths would churn it per contributor

@@ -85,6 +85,13 @@ Two measurements:
    loses what it saves in steps; the amortisation pays off where
    decode is memory-bound (the paper's regime — weights/KV traffic
    dominate), which is what the forward-pass count measures.
+
+7. **Observability scenario.**  One run with ``serve_telemetry`` on:
+   exports the Chrome/Perfetto lifecycle trace (the CI artifact),
+   snapshots the unified six-subsystem ``metrics()`` document, and
+   measures telemetry overhead on the pure-decode phase by stepping
+   two identical loops (on/off) interleaved — the CI gates are
+   ``telemetry_overhead_pct <= 3`` and an unchanged compile set.
 """
 
 from __future__ import annotations
@@ -96,7 +103,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import ab_ratio, csv_row
+from benchmarks.common import ab_ratio, csv_row, provenance
 from repro.configs import smoke_config
 from repro.kernels import autotune
 from repro.kernels.paged import spec_for
@@ -519,8 +526,8 @@ def _sched_scenario(params, cfg, quiet, fast):
     loop.submit(Request(rid=-1, prompt=prompts[0].copy(),
                         max_new_tokens=2))
     loop.run()
-    loop.ttft_s.clear()
-    loop.queue_wait_s.clear()
+    loop.ttft_s.reset()
+    loop.sched.queue_wait_s.reset()
     t0 = time.perf_counter()
     due = np.cumsum(gaps)
     nxt = 0
@@ -534,18 +541,20 @@ def _sched_scenario(params, cfg, quiet, fast):
             time.sleep(max(0.0, due[nxt] - (time.perf_counter() - t0)))
     wall = time.perf_counter() - t0
     ss = loop.sched_stats()
-    ttft = np.asarray(ss["ttft_s"])
-    qwait = np.asarray(ss["queue_wait_s"])
+    # ttft_s/queue_wait_s are bounded Histogram summaries now (count,
+    # quantiles, capped tail) — the loop no longer keeps raw per-request
+    # lists, so the SLO numbers read straight from the summary
+    ttft, qwait = ss["ttft_s"], ss["queue_wait_s"]
     completed = sum(r.rid >= 0 for r in loop.done)
     arr_doc = {
         "n_requests": n_arr,
         "mean_interarrival_s": mean_gap_s,
         "wall_s": wall,
         "completed": int(completed),
-        "p50_ttft_s": float(np.percentile(ttft, 50)),
-        "p99_ttft_s": float(np.percentile(ttft, 99)),
-        "p50_queue_wait_s": float(np.percentile(qwait, 50)),
-        "p99_queue_wait_s": float(np.percentile(qwait, 99)),
+        "p50_ttft_s": ttft["p50"],
+        "p99_ttft_s": ttft["p99"],
+        "p50_queue_wait_s": qwait["p50"],
+        "p99_queue_wait_s": qwait["p99"],
         "preemptions": ss["preemptions"],
         "resumes": ss["resumes"],
         "resume_prefill_tokens": ss["resume_prefill_tokens"],
@@ -647,6 +656,83 @@ def _spec_scenario(params, cfg, quiet, fast):
     return doc
 
 
+def _telemetry_scenario(params, cfg, quiet, fast, trace_path=None):
+    """Observability scenario (module docstring item 7): one traced
+    run covering all six subsystems, plus the telemetry-overhead gate.
+
+    Overhead is measured on the pure-decode phase — the serving hot
+    path — by stepping two IDENTICAL loops (telemetry on / off)
+    interleaved, so shared-runner load spikes hit both equally (the
+    same argument as common.ab_ratio).  Per-step medians; the CI gate
+    is ``telemetry_overhead_pct <= 3``.  The traced loop's lifecycle is
+    validated against the transition grammar and its compile set
+    re-asserted — tracing must not add a single jit shape."""
+    import time
+
+    from repro.serve import telemetry as tel_mod
+
+    max_new = 32 if fast else 64
+    n_req = 4
+
+    def build(tel_on):
+        rng = np.random.default_rng(9)
+        loop = PagedServeLoop(params, cfg, batch_slots=n_req, s_max=256,
+                              page_size=16, chunk=16, telemetry=tel_on)
+        for i in range(n_req):
+            loop.submit(Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab, 16).astype(np.int32),
+                max_new_tokens=max_new))
+        return loop
+
+    on, off = build(True), build(False)
+    on.step()     # admission + first decode: compile set warm,
+    off.step()    # every slot live — what follows is pure decode
+    t_on, t_off = [], []
+    for _ in range(max_new - 6):      # stop well before any slot finishes
+        t0 = time.perf_counter()
+        on.step()
+        t_on.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        off.step()
+        t_off.append(time.perf_counter() - t0)
+    t_on.sort(), t_off.sort()
+    us_on = t_on[len(t_on) // 2] * 1e6
+    us_off = t_off[len(t_off) // 2] * 1e6
+    overhead_pct = (us_on / us_off - 1.0) * 100.0
+    on.run(), off.run()               # drain both to completion
+    on.check_compiled(), off.check_compiled()
+
+    # the traced loop's lifecycle must parse end to end, and outputs
+    # must be identical with telemetry on vs off (host-side only)
+    tel_mod.validate_lifecycle(on.tel.tracer.events)
+    assert all(np.array_equal(a.output, b.output) for a, b in
+               zip(sorted(on.done, key=lambda r: r.rid),
+                   sorted(off.done, key=lambda r: r.rid))), \
+        "telemetry changed decode outputs"
+    m = on.metrics()
+    for sub in ("pool", "prefix_cache", "spec", "quant", "scheduler",
+                "autotune", "telemetry"):
+        assert sub in m, f"metrics() missing subsystem {sub!r}"
+    exp = on.export_trace(chrome_path=trace_path) if trace_path else {}
+    doc = {
+        "n_requests": n_req,
+        "max_new_tokens": max_new,
+        "decode_us_telemetry_on": us_on,
+        "decode_us_telemetry_off": us_off,
+        "telemetry_overhead_pct": overhead_pct,
+        "trace_events": len(on.tel.tracer.events),
+        "trace_dropped": on.tel.tracer.dropped,
+        "trace_export": exp,
+        "metrics": m,
+    }
+    if not quiet:
+        csv_row("telemetry", "on_us", "off_us", "overhead_pct", "events")
+        csv_row("", f"{us_on:.0f}", f"{us_off:.0f}",
+                f"{overhead_pct:.2f}", doc["trace_events"])
+    return doc
+
+
 def run(quiet=False, json_path=None, fast=False):
     autotune.reset_stats()   # the artifact's counters reflect THIS run
     cfg = _bench_cfg()
@@ -668,7 +754,12 @@ def run(quiet=False, json_path=None, fast=False):
     kv_quant = _kv_quant_scenario(params, cfg, S_max, quiet, fast)
     sched = _sched_scenario(params_c, cfg_c, quiet, fast)
     spec = _spec_scenario(params_c, cfg_c, quiet, fast)
+    trace_path = (json_path.replace(".json", "_trace.json")
+                  if json_path else None)
+    telem = _telemetry_scenario(params, cfg, quiet, fast,
+                                trace_path=trace_path)
     doc = {
+        "provenance": provenance(),
         "arch": ARCH,
         "batch_slots": BATCH,
         "page_size": PAGE,
@@ -681,6 +772,7 @@ def run(quiet=False, json_path=None, fast=False):
         "kv_quant": kv_quant,
         "scheduler": sched,
         "spec_decode": spec,
+        "telemetry": telem,
         # which autotune keys this run touched (diagnosable artifacts:
         # a restored CI cache shows hits, a cold one shows tunes)
         "autotune": autotune.snapshot_stats(),

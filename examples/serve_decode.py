@@ -5,6 +5,7 @@
     PYTHONPATH=src python examples/serve_decode.py --spec-k 4
     PYTHONPATH=src python examples/serve_decode.py --kv-dtype int8
     PYTHONPATH=src python examples/serve_decode.py --pool-pages 10
+    PYTHONPATH=src python examples/serve_decode.py --trace /tmp/serve.json
 
 Runs the slot-based serving loop (prefill + greedy decode) with each
 serve impl and reports tokens/s (CPU wall time is illustrative; the
@@ -82,6 +83,14 @@ def main():
                     help="worst-case page reservation at admission "
                          "(cfg.serve_on_demand_pages=False): exhaustion "
                          "impossible, concurrency pessimistic")
+    ap.add_argument("--trace", default="",
+                    help="enable serve telemetry and write the Chrome "
+                         "trace-event JSON here (load it in "
+                         "chrome://tracing or ui.perfetto.dev; a "
+                         "grep-able JSONL twin lands next to it) — "
+                         "one named track per request plus the "
+                         "serve-loop track, and a six-subsystem "
+                         "metrics summary printed per impl")
     args = ap.parse_args()
     if ((args.shared_prefix or args.spec_k or args.kv_dtype != "fp")
             and args.arch == "xlstm-350m"):
@@ -98,7 +107,11 @@ def main():
                                   spec_k=args.spec_k,
                                   kv_dtype=args.kv_dtype,
                                   n_pages=args.pool_pages or None,
-                                  on_demand=not args.reserved)
+                                  on_demand=not args.reserved,
+                                  telemetry=bool(args.trace) or None,
+                                  trace_path=(args.trace.replace(
+                                      ".json", f".{impl}.json")
+                                      if args.trace else None))
         else:
             loop = ServeLoop(params, cfg, batch_slots=3, s_max=64)
         rng = np.random.default_rng(0)
@@ -136,6 +149,14 @@ def main():
                   f"preemptions={ss['preemptions']} "
                   f"resume_tokens={ss['resume_prefill_tokens']} "
                   f"pool_peak={ss['pool_pages_peak']}pg")
+        if paged and args.trace:
+            m = loop.metrics()
+            tel = m["telemetry"]
+            ttft = m["scheduler"]["ttft_s"]
+            print(f"        telemetry: events={tel['trace_events']} "
+                  f"ttft_p50={ttft['p50'] * 1e3:.0f}ms "
+                  f"prefix_hit_rate={m['prefix_cache'].get('hit_rate', 0):.2f} "
+                  f"trace={loop.trace_path}")
 
 
 if __name__ == "__main__":

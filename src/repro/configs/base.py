@@ -152,6 +152,34 @@ class ArchConfig:
                                  # PageManager/PrefixCache/Scheduler
                                  # structural checks after every drain
                                  # step (on in CI and bench smoke)
+    serve_telemetry: bool = False  # unified serve observability
+                                 # (serve/telemetry.py): per-request
+                                 # lifecycle span tracing (submit ->
+                                 # queued -> admitted -> prefill_chunk*
+                                 # -> decode/verify* -> preempted ->
+                                 # resumed -> finished), per-phase
+                                 # wall-time histograms, and
+                                 # jax.profiler.TraceAnnotation around
+                                 # the compiled forwards so device
+                                 # profiles line up with host spans.
+                                 # Host-side only: outputs and the
+                                 # three-shape compile set are
+                                 # unchanged; overhead is CI-gated
+                                 # <= 3% of decode wall time.  Off =>
+                                 # the loop holds the no-op facade
+                                 # (telemetry.NULL).  Core counters
+                                 # and the bounded TTFT/queue-wait
+                                 # histograms in loop.metrics() are
+                                 # always on — this knob gates the
+                                 # tracer and phase timing only.
+    serve_trace_path: str = ""   # when set (with serve_telemetry on),
+                                 # PagedServeLoop.run() exports the
+                                 # trace here on every drain: Chrome
+                                 # trace-event JSON at this path
+                                 # (chrome://tracing / Perfetto) plus
+                                 # a JSONL twin at path + 'l'.
+                                 # loop.export_trace() exports on
+                                 # demand to any path.
     serve_shared_act_quant: bool = True  # swiglu wi/wg share one
                                  # activation quantise+pack (wi's
                                  # a_step); disable for checkpoints

@@ -59,27 +59,44 @@ _cache_file: Optional[str] = None
 generation: int = 0
 
 # process-local observability: which keys hit/missed the cache and which
-# were (re-)tuned this process.  The benches emit these into their JSON
-# artifacts so a CI bench run is diagnosable after the fact — "the cache
-# was overridden" alone says nothing about WHAT was re-tuned.
+# were (re-)tuned this process, kept in the unified serve-telemetry
+# metrics registry (serve/telemetry.MetricsRegistry) so the serving
+# stack's ``metrics()`` snapshot covers the autotuner alongside the
+# other subsystems.  The benches emit these into their JSON artifacts
+# so a CI bench run is diagnosable after the fact — "the cache was
+# overridden" alone says nothing about WHAT was re-tuned.  The registry
+# is created lazily: serve.telemetry must not be imported while the
+# serve package's own import chain (models -> kernels -> here) is
+# still executing.
 _stats_lock = threading.Lock()
-stats: Dict[str, Any] = {"lookup_hits": 0, "lookup_misses": 0,
-                         "tuned_keys": []}
+_registry = None
+_tuned_keys: List[str] = []
+
+
+def registry():
+    """The autotuner's process-local MetricsRegistry (lazy)."""
+    global _registry
+    with _stats_lock:
+        if _registry is None:
+            from repro.serve.telemetry import MetricsRegistry
+            _registry = MetricsRegistry()
+        return _registry
 
 
 def reset_stats() -> None:
+    registry().reset()
     with _stats_lock:
-        stats["lookup_hits"] = 0
-        stats["lookup_misses"] = 0
-        stats["tuned_keys"] = []
+        _tuned_keys.clear()
 
 
 def snapshot_stats() -> Dict[str, Any]:
-    """Copy of the process-local lookup/tune counters (bench artifacts)."""
+    """Copy of the process-local lookup/tune counters (bench artifacts
+    and ``PagedServeLoop.metrics()['autotune']``)."""
+    reg = registry()
     with _stats_lock:
-        return {"lookup_hits": stats["lookup_hits"],
-                "lookup_misses": stats["lookup_misses"],
-                "tuned_keys": list(stats["tuned_keys"])}
+        return {"lookup_hits": int(reg.get_counter("lookup_hits")),
+                "lookup_misses": int(reg.get_counter("lookup_misses")),
+                "tuned_keys": list(_tuned_keys)}
 
 
 # ---------------------------------------------------------------------------
@@ -209,8 +226,7 @@ def candidates(M: int, K: int, N: int, *, B_a: int, G: int,
 def lookup(key: str) -> Optional[Dict[str, Any]]:
     """Winning config for a shape key, or None.  Trace-safe."""
     entry = _load().get(key)
-    with _stats_lock:
-        stats["lookup_hits" if entry else "lookup_misses"] += 1
+    registry().inc("lookup_hits" if entry else "lookup_misses")
     return dict(entry["config"]) if entry else None
 
 
@@ -223,9 +239,10 @@ def record(key: str, config: Dict[str, Any], us: float,
                      "baseline_us": baseline_us or {}}
         generation += 1
         _save()
+    registry().inc("tunes")
     with _stats_lock:
-        if key not in stats["tuned_keys"]:
-            stats["tuned_keys"].append(key)
+        if key not in _tuned_keys:
+            _tuned_keys.append(key)
 
 
 def _time(fn, reps: int) -> float:

@@ -801,6 +801,7 @@ def decode_step(params, caches, tokens, pos, cfg):
 # ---------------------------------------------------------------------------
 
 
+@jax.named_scope("repro.lm.cache_copy_page")
 def cache_copy_page(caches, src, dst):
     """Copy-on-write for the paged serve path: duplicate physical page
     ``src`` into ``dst`` across EVERY layer's K/V pool (leaves are
@@ -814,6 +815,7 @@ def cache_copy_page(caches, src, dst):
     return jax.tree.map(lambda c: c.at[:, dst].set(c[:, src]), caches)
 
 
+@jax.named_scope("repro.lm.prefill_chunk")
 def prefill_chunk(params, caches, tokens, start, block_table_row, cfg,
                   last=0):
     """One fixed-size prefill chunk: tokens ``[1, C]`` at absolute
@@ -859,6 +861,7 @@ def prefill_chunk(params, caches, tokens, start, block_table_row, cfg,
     return logits[0, 0, : cfg.vocab], new_caches
 
 
+@jax.named_scope("repro.lm.verify_step_paged")
 def verify_step_paged(params, caches, tokens, positions, n_writes,
                       block_table, cfg):
     """Speculative-decoding verify pass: score a fixed ``K1``-token
@@ -905,6 +908,7 @@ def verify_step_paged(params, caches, tokens, positions, n_writes,
     return logits[:, :, : cfg.vocab], new_caches
 
 
+@jax.named_scope("repro.lm.decode_step_paged")
 def decode_step_paged(params, caches, tokens, positions, block_table, cfg):
     """One paged decode step with per-slot positions (no shared clock).
 

@@ -100,6 +100,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import autotune
 from repro.kernels.paged import PageSpec, spec_for
 from repro.models import lm
 from repro.serve.loop import Request
@@ -107,6 +108,7 @@ from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import (AdmissionError, PoolExhaustedError,
                                    SchedEntry, Scheduler)
 from repro.serve.spec import make_drafter
+from repro.serve.telemetry import NULL, Histogram, Telemetry
 
 
 class PageManager:
@@ -209,7 +211,9 @@ class PagedServeLoop:
                  kv_dtype: Optional[str] = None,
                  on_demand: Optional[bool] = None,
                  preempt_policy: Optional[str] = None,
-                 check_invariants: Optional[bool] = None):
+                 check_invariants: Optional[bool] = None,
+                 telemetry: Optional[bool] = None,
+                 trace_path: Optional[str] = None):
         if not lm.supports_paged(cfg):
             raise ValueError(
                 f"config {cfg.name!r} has non-pageable block kinds; "
@@ -257,6 +261,17 @@ class PagedServeLoop:
         self.check_invariants = bool(
             getattr(cfg, "serve_check_invariants", False)
             if check_invariants is None else check_invariants)
+        # unified observability (serve/telemetry.py): lifecycle tracer +
+        # metrics registry + jax.profiler annotations when enabled; the
+        # shared NULL no-op facade otherwise, so every instrumentation
+        # site below costs one attribute lookup and a pass when off.
+        # Purely host-side either way — the compile set is unaffected.
+        tel_on = bool(getattr(cfg, "serve_telemetry", False)
+                      if telemetry is None else telemetry)
+        self.tel = Telemetry() if tel_on else NULL
+        self.trace_path = str(
+            getattr(cfg, "serve_trace_path", "")
+            if trace_path is None else trace_path)
         if prefix_cache is None:
             prefix_cache = getattr(cfg, "serve_prefix_cache", True)
         # construction-time setting: _finish keys its page-transfer
@@ -267,7 +282,8 @@ class PagedServeLoop:
         self._prefix_enabled = bool(prefix_cache)
         self.prefix: Optional[PrefixCache] = (
             PrefixCache(page_size, self.pages,
-                        max_pages=getattr(cfg, "serve_prefix_cache_pages", 0))
+                        max_pages=getattr(cfg, "serve_prefix_cache_pages", 0),
+                        tel=self.tel)
             if prefix_cache else None
         )
         if spec_k is None:
@@ -332,8 +348,10 @@ class PagedServeLoop:
         self.preempted_tokens = 0     # KV positions dropped at preempt
         self.grown_pages = 0          # on-demand page-boundary allocs
         self.peak_live_slots = 0      # max concurrently live slots
-        self.ttft_s: List[float] = []       # per-request time-to-first-token
-        self.queue_wait_s: List[float] = []  # per-admission queue wait
+        # per-request time-to-first-token: bounded histogram (running
+        # quantile summary + capped tail), O(1) memory at any request
+        # volume.  Queue waits live on the Scheduler (observed at pop).
+        self.ttft_s = Histogram()
 
         # host-side scheduler state (numpy; shipped to device per step)
         self.block_table = np.zeros((batch_slots, self.spec.max_blocks),
@@ -394,7 +412,9 @@ class PagedServeLoop:
                 f"backpressure: queue at serve_queue_limit="
                 f"{self.queue_limit}; retry later"
             )
-        self.sched.push(req, getattr(req, "priority", None))
+        ent = self.sched.push(req, getattr(req, "priority", None))
+        self.tel.event("submit", req.rid, prompt_tokens=L,
+                       priority=ent.priority)
 
     def _prefill_blocks(self, L: int) -> int:
         """Blocks the padded chunk prefill of ``L`` tokens writes."""
@@ -490,8 +510,13 @@ class PagedServeLoop:
     def _cow(self, src: int, dst: int) -> None:
         """Copy-on-write: duplicate physical page ``src`` into the
         freshly-allocated ``dst`` across every layer's K/V pool."""
-        self.caches = self._copy_page(self.caches, jnp.int32(src),
-                                      jnp.int32(dst))
+        t0 = self.tel.now()
+        with self.tel.annotate("repro.serve.cow_copy"):
+            self.caches = self._copy_page(self.caches, jnp.int32(src),
+                                          jnp.int32(dst))
+        t1 = self.tel.now()
+        self.tel.event("cow_copy", t0=t0, t1=t1, src=src, dst=dst)
+        self.tel.observe("phase.cow_s", t1 - t0)
         self.cow_copies += 1
 
     def _admit(self, slot_i: int) -> str:
@@ -536,7 +561,14 @@ class PagedServeLoop:
         if page_ids is None:
             return "blocked"              # pool exhausted: request waits
         self.sched.pop(ent)
-        self.queue_wait_s.append(time.monotonic() - ent.t_enqueue)
+        tel, rid = self.tel, ent.req.rid
+        t_adm = tel.now()
+        # the queued span covers the latest (re-)enqueue; resumes show
+        # preempted -> queued -> resumed on the request's track
+        tel.event("queued", rid, t0=tel.rel(ent.t_enqueue), t1=t_adm,
+                  preemptions=ent.preemptions)
+        tel.event("resumed" if ent.out else "admitted", rid,
+                  cached_blocks=len(hits), fresh_pages=need, cow=n_cow)
         C, P = self.chunk, self.spec.page_size
         if self.prefix is not None:
             # one lookup record per admitted request (post-fallback:
@@ -572,10 +604,16 @@ class PagedServeLoop:
             seg = tokens[ci * C:(ci + 1) * C]
             buf[: len(seg)] = seg
             last = (L - 1) - ci * C if ci == n_chunks - 1 else 0
-            logits, self.caches = self._prefill_chunk(
-                self.params, self.caches, jnp.asarray(buf[None]),
-                jnp.int32(ci * C), bt_row, jnp.int32(last),
-            )
+            t0c = tel.now()
+            with tel.annotate("repro.serve.prefill_chunk"):
+                logits, self.caches = self._prefill_chunk(
+                    self.params, self.caches, jnp.asarray(buf[None]),
+                    jnp.int32(ci * C), bt_row, jnp.int32(last),
+                )
+            t1c = tel.now()
+            tel.event("prefill_chunk", rid, t0=t0c, t1=t1c,
+                      chunk=ci, start=ci * C, tokens=C)
+            tel.observe("phase.prefill_chunk_s", t1c - t0c)
         run_tokens = (n_chunks - ci0) * C
         self.prefill_tokens_run += run_tokens
         self.prefill_tokens_saved += ci0 * C
@@ -586,7 +624,7 @@ class PagedServeLoop:
             self.resume_prefill_tokens += run_tokens
         tok0 = int(np.asarray(jnp.argmax(logits)))
         if not ent.out:
-            self.ttft_s.append(time.monotonic() - ent.t_submit)
+            self.ttft_s.observe(time.monotonic() - ent.t_submit)
         self.lens[slot_i] = L
         entry = {"req": ent.req, "out": ent.out + [tok0], "cur": tok0,
                  "blocks": blocks, "shared": shared,
@@ -612,6 +650,9 @@ class PagedServeLoop:
     def _finish(self, slot_i: int, entry) -> None:
         entry["req"].output = np.asarray(entry["out"], np.int32)
         self.done.append(entry["req"])
+        self.tel.event("finished", entry["req"].rid,
+                       tokens=len(entry["out"]),
+                       pages=len(entry["blocks"]))
         blocks = entry["blocks"]
         n_prompt = len(entry["req"].prompt) // self.spec.page_size
         if self._prefix_enabled and self.prefix is not None and n_prompt:
@@ -665,6 +706,10 @@ class PagedServeLoop:
         self.sched.requeue(ent)
         self.preemptions += 1
         self.preempted_tokens += lens
+        self.tel.event("preempted", entry["req"].rid,
+                       tokens_dropped=lens, pages_parked=n_full
+                       if (self._prefix_enabled and self.prefix is not None)
+                       else 0)
 
     def _fill_free_slots(self, mid_decode: bool) -> None:
         """Admit queued requests into every free slot.  A request that
@@ -682,9 +727,13 @@ class PagedServeLoop:
 
     def run(self):
         """Process the queue; greedy decoding.  Returns finished
-        requests (same contract as the dense loop)."""
+        requests (same contract as the dense loop).  With telemetry on
+        and ``cfg.serve_trace_path`` set, the drain auto-exports the
+        Chrome trace (plus a JSONL twin) when it completes."""
         while self.step():
             pass
+        if self.trace_path and self.tel.enabled:
+            self.export_trace()
         return self.done
 
     def step(self) -> bool:
@@ -714,7 +763,9 @@ class PagedServeLoop:
                 self._check()
             return False
         drafts = self._propose(live)
+        t0r = self.tel.now()
         live, drafts = self._reserve_step(live, drafts)
+        self.tel.observe("phase.reserve_s", self.tel.now() - t0r)
         freed = True        # every slot preempted => admit next round
         if live:
             if any(len(drafts[i]) for i in live):
@@ -733,6 +784,11 @@ class PagedServeLoop:
                 sum(s is not None for s in self.slots))
         if self.check_invariants:
             self._check()
+        if self.tel.enabled:
+            self.tel.set_gauge("live_slots",
+                               sum(s is not None for s in self.slots))
+            self.tel.set_gauge("queued", len(self.sched))
+            self.tel.set_gauge("pool_pages_in_use", self.pages.in_use)
         return bool(len(self.sched)
                     or any(s is not None for s in self.slots))
 
@@ -753,6 +809,8 @@ class PagedServeLoop:
             entry["shared"] = np.append(entry["shared"], False)
             self.block_table[slot_i, b] = pages[0]
             self.grown_pages += 1
+            self.tel.event("grow_page", entry["req"].rid, page=pages[0],
+                           block=b)
         return True
 
     def _reserve_step(self, live: List[int], drafts: dict):
@@ -896,15 +954,25 @@ class PagedServeLoop:
             self._ensure_writable(i, self.slots[i],
                                   int(self.lens[i]) // P)
             cur[i, 0] = self.slots[i]["cur"]
-        logits, self.caches = self._decode(
-            self.params, self.caches, jnp.asarray(cur),
-            jnp.asarray(self.lens), jnp.asarray(self.block_table),
-        )
+        tel = self.tel
+        t0 = tel.now()
+        with tel.annotate("repro.serve.decode_step"):
+            logits, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(cur),
+                jnp.asarray(self.lens), jnp.asarray(self.block_table),
+            )
         self.decode_steps += 1
         self.slot_steps += len(live)
         nxt = np.asarray(jnp.argmax(logits, -1))
+        # the argmax force above synchronised the device, so t1 covers
+        # dispatch + execution; events go out BEFORE _accept so a
+        # finishing slot's 'finished' mark follows its decode span
+        t1 = tel.now()
+        tel.observe("phase.decode_s", t1 - t0)
         freed = False
         for i in live:
+            tel.event("decode", self.slots[i]["req"].rid, t0=t0, t1=t1,
+                      pos=int(self.lens[i]))
             _, fin = self._accept(i, self.slots[i], [int(nxt[i])])
             freed |= fin
         return freed
@@ -936,14 +1004,19 @@ class PagedServeLoop:
             lens = int(self.lens[i])
             for blk in range(lens // P, (lens + len(d)) // P + 1):
                 self._ensure_writable(i, entry, blk)
-        logits, self.caches = self._verify(
-            self.params, self.caches, jnp.asarray(toks),
-            jnp.asarray(self.lens), jnp.asarray(n_writes),
-            jnp.asarray(self.block_table),
-        )
+        tel = self.tel
+        t0 = tel.now()
+        with tel.annotate("repro.serve.verify_step"):
+            logits, self.caches = self._verify(
+                self.params, self.caches, jnp.asarray(toks),
+                jnp.asarray(self.lens), jnp.asarray(n_writes),
+                jnp.asarray(self.block_table),
+            )
         self.spec_steps += 1
         self.slot_steps += len(live)
         greedy = np.asarray(jnp.argmax(logits, -1))          # [B, K1]
+        t1 = tel.now()
+        tel.observe("phase.verify_s", t1 - t0)
         freed = False
         for i in live:
             entry = self.slots[i]
@@ -951,6 +1024,8 @@ class PagedServeLoop:
             m = 0
             while m < len(d) and g[m] == d[m]:
                 m += 1
+            tel.event("verify", entry["req"].rid, t0=t0, t1=t1,
+                      proposed=len(d), matched=m, pos=int(self.lens[i]))
             self.spec_proposed += len(d)
             # g[:m] == the accepted draft; g[m] is the bonus token the
             # model emits after it (for m == 0 that is row 0's argmax:
@@ -993,7 +1068,9 @@ class PagedServeLoop:
     def sched_stats(self) -> dict:
         """Scheduling/preemption accounting (the SLO bench's numbers):
         preemption + recompute-resume counters, concurrency and pool
-        high-water marks, and the raw TTFT / queue-wait samples."""
+        high-water marks, and bounded TTFT / queue-wait summaries
+        (count/mean/p50/p90/p99 + a capped recent-sample tail — never
+        an unbounded per-request list)."""
         return {
             **self.sched.stats(),
             "on_demand": self.on_demand,
@@ -1005,9 +1082,68 @@ class PagedServeLoop:
             "peak_live_slots": self.peak_live_slots,
             "pool_pages_peak": self.pages.peak,
             "pool_exhaustions": self.pages.exhaustions,
-            "ttft_s": list(self.ttft_s),
-            "queue_wait_s": list(self.queue_wait_s),
+            "ttft_s": self.ttft_s.summary(),
         }
+
+    def pool_stats(self) -> dict:
+        """Page-pool accounting (the ``metrics()`` pool subsystem)."""
+        return {
+            "n_pages": self.pages.n_pages,
+            "usable": self.pages.n_pages - 1,
+            "in_use": self.pages.in_use,
+            "available": self.pages.available,
+            "allocs": self.pages.allocs,
+            "frees": self.pages.frees,
+            "peak": self.pages.peak,
+            "exhaustions": self.pages.exhaustions,
+            "cow_copies": self.cow_copies,
+            "grown_pages": self.grown_pages,
+            "pool_bytes": self.kv_pool_bytes(),
+        }
+
+    def metrics(self) -> dict:
+        """One snapshot covering every serving subsystem — the unified
+        observability surface the per-subsystem dicts (``spec_stats``,
+        ``sched_stats``, ``prefix.stats`` ...) feed into.  Always
+        available; the ``telemetry`` section (registry counters/gauges/
+        phase histograms + tracer depth) appears only when telemetry
+        is enabled.  JSON-serialisable by construction."""
+        from repro.serve.telemetry import jsonable
+        doc = {
+            "pool": self.pool_stats(),
+            "prefix_cache": (self.prefix.stats() if self.prefix is not None
+                             else {"enabled": False}),
+            "spec": {**self.spec_stats(),
+                     "k": self.spec_k,
+                     "gen_tokens": self.gen_tokens,
+                     "refills": self.refills,
+                     "prefill_tokens_run": self.prefill_tokens_run,
+                     "prefill_tokens_saved": self.prefill_tokens_saved},
+            "quant": {"kv_dtype": str(self.kv_spec.dtype),
+                      "quantised": bool(self.kv_spec.quantised),
+                      "pool_bytes": self.kv_pool_bytes()},
+            "scheduler": self.sched_stats(),
+            "autotune": autotune.snapshot_stats(),
+        }
+        if self.tel.enabled:
+            doc["telemetry"] = {
+                **self.tel.registry.snapshot(),
+                "trace_events": len(self.tel.tracer.events),
+                "trace_dropped": self.tel.tracer.dropped,
+            }
+        return jsonable(doc)
+
+    def export_trace(self, chrome_path: Optional[str] = None,
+                     jsonl_path: Optional[str] = None) -> dict:
+        """Write the lifecycle trace: Chrome trace-event JSON at
+        ``chrome_path`` (default ``cfg.serve_trace_path``) and a JSONL
+        twin (default: same path + 'l').  No-op returning ``{}`` when
+        telemetry is off or no path is available."""
+        path = chrome_path or self.trace_path
+        if not path or not self.tel.enabled:
+            return {}
+        return self.tel.export(chrome_path=path,
+                               jsonl_path=jsonl_path or path + "l")
 
     def compiled_shapes(self) -> dict:
         """Per-jit trace counts (the compile-set invariant)."""

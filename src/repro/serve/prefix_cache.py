@@ -82,10 +82,14 @@ class PrefixCache:
     pool pressure the serve loop additionally calls ``evict`` directly.
     """
 
-    def __init__(self, page_size: int, pages, max_pages: int = 0):
+    def __init__(self, page_size: int, pages, max_pages: int = 0,
+                 tel=None):
+        from repro.serve import telemetry
+
         self.P = page_size
         self.pages = pages                    # serve.paged.PageManager
         self.max_pages = max_pages
+        self.tel = tel if tel is not None else telemetry.NULL
         self.root = RadixNode((), -1, None)   # sentinel: owns no page
         self.n_nodes = 0
         self._tick = 0
@@ -95,6 +99,7 @@ class PrefixCache:
         self.inserted = 0         # nodes created
         self.deduped = 0          # insert found the page already cached
         self.evicted = 0          # nodes evicted
+        self.locks = 0            # slot map-references taken on matches
 
     # -- lookup -------------------------------------------------------------
 
@@ -139,6 +144,7 @@ class PrefixCache:
         """Take one page reference per matched node for a slot that is
         about to map them (released by the loop at slot finish)."""
         self.pages.retain([n.page_id for n in nodes])
+        self.locks += len(nodes)
 
     # -- insert / merge -----------------------------------------------------
 
@@ -220,6 +226,9 @@ class PrefixCache:
                 self.n_nodes -= 1
                 self.evicted += 1
                 freed += 1
+        if freed:
+            self.tel.event("prefix_evict", pages=freed,
+                           nodes_left=self.n_nodes)
         return freed
 
     # -- introspection ------------------------------------------------------
@@ -238,6 +247,7 @@ class PrefixCache:
             "inserted": self.inserted,
             "deduped": self.deduped,
             "evicted": self.evicted,
+            "locks": self.locks,
         }
 
     def check(self) -> None:

@@ -44,6 +44,8 @@ import dataclasses
 import time
 from typing import Iterable, List, Optional, Sequence, Tuple
 
+from repro.serve.telemetry import Histogram
+
 
 class AdmissionError(ValueError):
     """A request that can never be served as submitted: reject at
@@ -97,6 +99,10 @@ class Scheduler:
         self.submitted = 0
         self.requeued = 0        # preemption re-entries
         self.peak_queue = 0
+        # bounded per-admission queue-wait accounting (observed at
+        # ``pop``): running quantile summary + capped sample tail, O(1)
+        # memory at any request volume — never a raw per-request list
+        self.queue_wait_s = Histogram()
 
     # -- queue --------------------------------------------------------------
 
@@ -151,7 +157,11 @@ class Scheduler:
                    key=lambda e: (self.effective_priority(e), -e.seq))
 
     def pop(self, ent: SchedEntry) -> None:
+        """Remove an entry the loop is admitting; records its queue
+        wait (time since the latest enqueue — a resume's wait counts
+        from its requeue, not first submission; TTFT covers that)."""
         self._q.remove(ent)
+        self.queue_wait_s.observe(time.monotonic() - ent.t_enqueue)
 
     # -- preemption ---------------------------------------------------------
 
@@ -183,6 +193,7 @@ class Scheduler:
             "requeued": self.requeued,
             "peak_queue": self.peak_queue,
             "ticks": self.ticks,
+            "queue_wait_s": self.queue_wait_s.summary(),
         }
 
     def check(self) -> None:
