@@ -92,6 +92,21 @@ Two measurements:
    measures telemetry overhead on the pure-decode phase by stepping
    two identical loops (on/off) interleaved — the CI gates are
    ``telemetry_overhead_pct <= 3`` and an unchanged compile set.
+
+8. **Swap-tier scenario.**  The host-RAM page swap tier
+   (``cfg.serve_swap``) under a pool sized to force mid-decode
+   preemptions: the identical workload with recompute-only preemption
+   (PR 6 behaviour) vs the swap path pinned on, outputs asserted
+   identical (swap → restore is invisible to the math — the
+   bit-exactness matrix lives in tests/test_swap.py).  Gated numbers:
+   ``recompute_tokens_saved_frac >= 0.5`` (resume prefill tokens the
+   host store eliminated at matched completion) and
+   ``swap_idle_overhead_pct <= 3`` (pure-decode step time with the
+   tier enabled-but-idle vs off, interleaved medians — the enabled
+   loop's only extra work when nothing swaps is a per-preemption
+   policy check that never fires).  The swap loop's compile set is
+   re-asserted: three forward shapes plus one fixed-width gather and
+   one scatter.
 """
 
 from __future__ import annotations
@@ -422,12 +437,16 @@ def _kv_quant_scenario(params, cfg, S_max, quiet, fast):
                      for a, b in zip(outs[dt], outs["fp"])) / len(prompts)
              for dt in ("int8", "int4")}
     # measured tolerances (rel. to the logit scale), pinned with slack:
-    # int8 measures ~0.017 here; int4's ~0.26 is inherent to 3-bit
-    # codes (qmax=7 => ~7% per-element) compounding through a
-    # random-init model's near-zero logit gaps, so its bound is only a
-    # catastrophic-breakage detector
+    # int8 measures ~0.017 here; int4 ~0.225 with the full [-8, 7]
+    # scheme (scale amax/7.5; was ~0.256 under the old ±7 clip) —
+    # the ISSUE 9 audit's documented floor of per-(token, head) absmax
+    # int4 (worst per-element error ~amax/15, ~13x coarser than int8)
+    # amplified through a random-init model's near-zero logit gaps.
+    # <= 0.05 / greedy match would need finer-grained scales or more
+    # bits, not a codec fix (tests/test_kv_quant.py pins the analysis);
+    # the 0.30 gate catches any regression toward the old scheme
     assert err["int8"] <= 0.05, f"int8 logit error {err['int8']}"
-    assert err["int4"] <= 0.50, f"int4 logit error {err['int4']}"
+    assert err["int4"] <= 0.30, f"int4 logit error {err['int4']}"
     # the identity assertion is numerics-sensitive by nature (a jax/XLA
     # upgrade can reorder fp fusions and flip a near-tied argmax): if it
     # trips WITHOUT a quantisation change, re-pin the workload seed to
@@ -587,6 +606,124 @@ def _sched_scenario(params, cfg, quiet, fast):
                 arr_doc["preemptions"],
                 f"{arr_doc['p50_ttft_s'] * 1e3:.0f}",
                 f"{arr_doc['p99_ttft_s'] * 1e3:.0f}")
+    return doc
+
+
+def _swap_scenario(params, cfg, quiet, fast):
+    """Host-RAM swap tier (module docstring item 8): recompute tokens
+    saved by swapping preemption victims' pages to host RAM, plus the
+    enabled-but-idle decode overhead.  See the docstring for the two
+    CI gates this scenario's doc feeds."""
+    import time
+
+    P = C = 16
+    s_max = 128
+    n_pages = 13                      # 12 usable: forces preemptions
+    B = 8
+    L = 32                            # longer prompts: replay is real cost
+    max_new = 24 if fast else 40
+    n_req = 8 if fast else 10
+    c = dataclasses.replace(cfg, serve_kv_dtype="int8",
+                            serve_check_invariants=True)
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, L).astype(np.int32)
+               for _ in range(n_req)]
+
+    # -- (a) matched-completion A/B: recompute-only vs swap pinned on --
+    outs, mode_doc = {}, {}
+    for mode in ("recompute", "swap"):
+        loop = PagedServeLoop(
+            params, c, batch_slots=B, s_max=s_max, page_size=P,
+            chunk=C, n_pages=n_pages, swap=(mode == "swap"),
+            swap_policy="always" if mode == "swap" else None)
+        for i, p in enumerate(prompts):
+            loop.submit(Request(rid=i, prompt=p.copy(),
+                                max_new_tokens=max_new))
+        outs[mode] = {r.rid: r.output for r in loop.run()}
+        ss = loop.sched_stats()
+        mode_doc[mode] = {
+            "completed": len(outs[mode]),
+            "preemptions": ss["preemptions"],
+            "resumes": ss["resumes"],
+            "resume_prefill_tokens": ss["resume_prefill_tokens"],
+            "swapped_out_pages": ss["swapped_out_pages"],
+            "swapped_in_pages": ss["swapped_in_pages"],
+            "restored_tokens": ss["swap_restored_tokens"],
+        }
+        if mode == "swap":
+            mode_doc[mode]["swap_stats"] = loop.swap_stats()
+        loop.check_compiled()
+        loop.pages.check()
+    identical = all(np.array_equal(outs["recompute"][r], outs["swap"][r])
+                    for r in outs["recompute"])
+    assert identical, "swap-tier outputs diverged from recompute-resume"
+    assert mode_doc["recompute"]["completed"] \
+        == mode_doc["swap"]["completed"], "completion not matched"
+    assert mode_doc["swap"]["preemptions"] > 0, \
+        "pool never exhausted: swap scenario is vacuous"
+    base = mode_doc["recompute"]["resume_prefill_tokens"]
+    saved_frac = 1.0 - (mode_doc["swap"]["resume_prefill_tokens"]
+                        / max(base, 1))
+
+    # -- (b) enabled-but-idle decode overhead (interleaved medians,
+    # the common.ab_ratio argument; ample default pool => no
+    # preemptions, the tier never engages) --
+    idle_new = 32 if fast else 64
+
+    def build(swap_on):
+        rng_i = np.random.default_rng(9)
+        loop = PagedServeLoop(params, cfg, batch_slots=4, s_max=256,
+                              page_size=16, chunk=16, swap=swap_on)
+        for i in range(4):
+            loop.submit(Request(
+                rid=i,
+                prompt=rng_i.integers(0, cfg.vocab, 16).astype(np.int32),
+                max_new_tokens=idle_new))
+        return loop
+
+    on, off = build(True), build(False)
+    on.step(), off.step()             # admission + first decode: warm
+    t_on, t_off = [], []
+    for _ in range(idle_new - 6):     # stop well before any slot finishes
+        t0 = time.perf_counter()
+        on.step()
+        t_on.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        off.step()
+        t_off.append(time.perf_counter() - t0)
+    t_on.sort(), t_off.sort()
+    us_on = t_on[len(t_on) // 2] * 1e6
+    us_off = t_off[len(t_off) // 2] * 1e6
+    overhead_pct = (us_on / us_off - 1.0) * 100.0
+    on.run(), off.run()
+    assert on.preemptions == 0 and on.swap_stats()["swapped_out_pages"] \
+        == 0, "idle measurement engaged the tier"
+    assert all(np.array_equal(a.output, b.output) for a, b in
+               zip(sorted(on.done, key=lambda r: r.rid),
+                   sorted(off.done, key=lambda r: r.rid))), \
+        "idle swap tier changed decode outputs"
+    on.check_compiled(), off.check_compiled()
+
+    doc = {
+        "kv_dtype": "int8",
+        "pool_pages": n_pages - 1,
+        "batch_slots": B,
+        "prompt_tokens": L,
+        "max_new_tokens": max_new,
+        "outputs_identical_across_modes": bool(identical),
+        "recompute": mode_doc["recompute"],
+        "swap": mode_doc["swap"],
+        "recompute_tokens_saved_frac": saved_frac,
+        "decode_us_swap_idle": us_on,
+        "decode_us_swap_off": us_off,
+        "swap_idle_overhead_pct": overhead_pct,
+    }
+    if not quiet:
+        csv_row("swap_tier", "resume_tok_recompute", "resume_tok_swap",
+                "saved_frac", "idle_overhead_pct")
+        csv_row(f"{n_pages - 1}pg_int8", base,
+                mode_doc["swap"]["resume_prefill_tokens"],
+                f"{saved_frac:.2f}", f"{overhead_pct:.2f}")
     return doc
 
 
@@ -753,6 +890,7 @@ def run(quiet=False, json_path=None, fast=False):
     shared = _shared_prefix_scenario(params, cfg, quiet, fast)
     kv_quant = _kv_quant_scenario(params, cfg, S_max, quiet, fast)
     sched = _sched_scenario(params_c, cfg_c, quiet, fast)
+    swap = _swap_scenario(params_c, cfg_c, quiet, fast)
     spec = _spec_scenario(params_c, cfg_c, quiet, fast)
     trace_path = (json_path.replace(".json", "_trace.json")
                   if json_path else None)
@@ -771,6 +909,7 @@ def run(quiet=False, json_path=None, fast=False):
         "shared_prefix": shared,
         "kv_quant": kv_quant,
         "scheduler": sched,
+        "swap_tier": swap,
         "spec_decode": spec,
         "telemetry": telem,
         # which autotune keys this run touched (diagnosable artifacts:

@@ -5,6 +5,7 @@
     PYTHONPATH=src python examples/serve_decode.py --spec-k 4
     PYTHONPATH=src python examples/serve_decode.py --kv-dtype int8
     PYTHONPATH=src python examples/serve_decode.py --pool-pages 10
+    PYTHONPATH=src python examples/serve_decode.py --pool-pages 10 --swap
     PYTHONPATH=src python examples/serve_decode.py --trace /tmp/serve.json
 
 Runs the slot-based serving loop (prefill + greedy decode) with each
@@ -79,6 +80,17 @@ def main():
                          "(0 = the default worst-case sizing); a tight "
                          "pool forces mid-decode preemptions and "
                          "recompute-resume — outputs stay bit-identical")
+    ap.add_argument("--swap", action="store_true",
+                    help="host-RAM page swap tier: preempted victims' "
+                         "KV pages (quantised codes + scales, lossless) "
+                         "move to a content-addressed host store and "
+                         "restore on resume instead of recomputing "
+                         "(pair with --pool-pages to force preemptions; "
+                         "outputs stay bit-identical)")
+    ap.add_argument("--swap-bytes", type=int, default=0,
+                    help="host swap store budget in bytes (LRU-evicted "
+                         "beyond it; evicted pages just cost recompute; "
+                         "0 = unbounded)")
     ap.add_argument("--reserved", action="store_true",
                     help="worst-case page reservation at admission "
                          "(cfg.serve_on_demand_pages=False): exhaustion "
@@ -92,8 +104,8 @@ def main():
                          "serve-loop track, and a six-subsystem "
                          "metrics summary printed per impl")
     args = ap.parse_args()
-    if ((args.shared_prefix or args.spec_k or args.kv_dtype != "fp")
-            and args.arch == "xlstm-350m"):
+    if ((args.shared_prefix or args.spec_k or args.kv_dtype != "fp"
+            or args.swap) and args.arch == "xlstm-350m"):
         args.arch = "codeqwen1.5-7b"      # needs a paged-capable family
 
     for impl in ("dense", "int8", "tlmac"):
@@ -107,6 +119,8 @@ def main():
                                   spec_k=args.spec_k,
                                   kv_dtype=args.kv_dtype,
                                   n_pages=args.pool_pages or None,
+                                  swap=args.swap or None,
+                                  swap_bytes=args.swap_bytes or None,
                                   on_demand=not args.reserved,
                                   telemetry=bool(args.trace) or None,
                                   trace_path=(args.trace.replace(
@@ -149,6 +163,18 @@ def main():
                   f"preemptions={ss['preemptions']} "
                   f"resume_tokens={ss['resume_prefill_tokens']} "
                   f"pool_peak={ss['pool_pages_peak']}pg")
+        if paged and args.swap:
+            sw = loop.metrics()["swap"]
+            st, pol = sw["store"], sw["policy"]
+            print(f"        swap tier: out={sw['swapped_out_pages']}pg/"
+                  f"{sw['swap_out_bytes']}B "
+                  f"in={sw['swapped_in_pages']}pg "
+                  f"restored={sw['restored_tokens']}tok "
+                  f"store={st['pages']}pg/{st['bytes']}B "
+                  f"evicted={st['evicted_pages']} "
+                  f"policy={pol['mode']}("
+                  f"swap={pol['chose_swap']},"
+                  f"recompute={pol['chose_recompute']})")
         if paged and args.trace:
             m = loop.metrics()
             tel = m["telemetry"]

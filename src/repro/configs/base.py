@@ -138,6 +138,31 @@ class ArchConfig:
                                  # victim for recompute-resume;
                                  # 'never' raises PoolExhaustedError
                                  # instead
+    serve_swap: bool = False     # host-RAM page swap tier
+                                 # (serve/swap.py): a preemption
+                                 # victim's KV pages are copied
+                                 # device->host (codes + scales, so
+                                 # quantised pools swap losslessly)
+                                 # and restored at resume instead of
+                                 # recomputed from tokens.  Off =>
+                                 # PR 6 recompute-resume behaviour
+    serve_swap_bytes: int = 0    # host-RAM budget for the swap store
+                                 # in bytes; LRU-evicts whole pages
+                                 # over budget (an evicted page only
+                                 # costs recompute at resume).  0 =
+                                 # unbounded
+    serve_swap_policy: str = "auto"  # per-victim recompute-vs-swap
+                                 # choice (scheduler.SwapPolicy):
+                                 # 'auto' compares EMA-measured
+                                 # transfer cost vs replay cost;
+                                 # 'always' pins the swap path
+                                 # (tests/benches); 'never' keeps the
+                                 # store for hits but never swaps out
+    serve_swap_ring_pages: int = 8  # staging-ring transaction width in
+                                 # pages: each device gather/scatter
+                                 # moves exactly this many pages (one
+                                 # compiled trace each; short tails
+                                 # are padded with the scratch page)
     serve_priority_default: int = 0  # admission priority for requests
                                  # submitted without one (higher =
                                  # admitted sooner)

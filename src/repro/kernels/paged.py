@@ -125,7 +125,11 @@ class KVQuantSpec:
       int8  one int8 code per element, absmax scale per (page slot,
             kv head) over the head dim.
       int4  two codes packed per int8 byte (low nibble = even element),
-            same scale layout; codes clip to [-7, 7].
+            same scale layout; codes span the full [-8, 7] range —
+            scale ``amax / 7.5`` with the +amax endpoint clipping onto
+            code 7, so the worst-case step error is ``amax / 15``
+            (wasting the -8 code, as an early version did with a ±7
+            clip at scale ``amax / 7``, costs ``amax / 14``).
     """
 
     dtype: str = "fp"
@@ -143,6 +147,22 @@ class KVQuantSpec:
     @property
     def qmax(self) -> int:
         return {"int8": 127, "int4": 7}[self.dtype]
+
+    @property
+    def qlo(self) -> int:
+        """Lowest representable code.  int4 uses the asymmetric -8 of
+        two's complement; int8 keeps the historical symmetric -127 (its
+        step error is already ~0.4% — not worth perturbing the pinned
+        int8-vs-fp greedy identity for the extra half step)."""
+        return {"int8": -127, "int4": -8}[self.dtype]
+
+    @property
+    def qdiv(self) -> float:
+        """absmax -> scale divisor: the largest magnitude that still
+        rounds into [qlo, qmax] (7.5 for int4: +amax rounds half-even
+        to 8 and clips onto 7, -amax rounds to the representable -8 —
+        both end up exactly half a step from their code)."""
+        return {"int8": 127.0, "int4": 7.5}[self.dtype]
 
     @property
     def packed(self) -> bool:
@@ -191,14 +211,16 @@ def quantise_kv(x, qspec: KVQuantSpec):
     ``x [..., hd]`` float -> ``(codes [..., code_width], scales [...])``.
     The scale is a pure function of the one vector it quantises (no
     page history), computed in f32 and stored in ``SCALE_DTYPE``; codes
-    round half-to-even and clip to ±qmax.  An all-zero vector gets
-    scale 1 (codes 0), never a 0/0."""
+    round half-to-even and clip to [qlo, qmax] — int4 spans the full
+    [-8, 7] two's-complement range (scale ``amax / 7.5``), int8 stays
+    symmetric ±127.  An all-zero vector gets scale 1 (codes 0), never
+    a 0/0."""
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1)
-    scale = jnp.where(amax > 0, amax / qspec.qmax, 1.0).astype(SCALE_DTYPE)
+    scale = jnp.where(amax > 0, amax / qspec.qdiv, 1.0).astype(SCALE_DTYPE)
     codes = jnp.clip(
         jnp.round(xf / scale.astype(jnp.float32)[..., None]),
-        -qspec.qmax, qspec.qmax,
+        qspec.qlo, qspec.qmax,
     ).astype(jnp.int8)
     if qspec.packed:
         codes = pack_int4(codes)
@@ -371,6 +393,28 @@ def copy_page(k_pages, v_pages, src, dst):
     sidecars for free)."""
     return (k_pages.at[dst].set(k_pages[src]),
             v_pages.at[dst].set(v_pages[src]))
+
+
+def swap_out_kv(kv: dict, page_ids) -> dict:
+    """Gather ``page_ids [R]`` whole pages out of one layer's pool for
+    a device→host swap: every leaf — codes AND scale sidecars — yields
+    its ``[R, page_size, ...]`` page rows, so a quantised pool swaps
+    losslessly (raw int8 code bytes + bf16 scales travel together; no
+    dequant, no re-quant, bit-identical on restore by construction).
+    ``page_ids`` is a traced vector of FIXED width — the staging-ring
+    transaction size — so one compile covers every swap the serve loop
+    ever performs (short transactions pad with the scratch page)."""
+    return {name: leaf[page_ids] for name, leaf in kv.items()}
+
+
+def swap_in_kv(kv: dict, staged: dict, page_ids) -> dict:
+    """Inverse of ``swap_out_kv``: scatter staged host pages back into
+    freshly-allocated physical pages.  ``staged`` leaves are
+    ``[R, page_size, ...]`` in the pool leaf's own dtype; padding rows
+    of a short transaction carry page id 0 and land harmlessly in the
+    scratch page (whose content is never read unmasked)."""
+    return {name: leaf.at[page_ids].set(staged[name].astype(leaf.dtype))
+            for name, leaf in kv.items()}
 
 
 def gather_kv(k_pages, v_pages, block_table):

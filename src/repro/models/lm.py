@@ -815,6 +815,32 @@ def cache_copy_page(caches, src, dst):
     return jax.tree.map(lambda c: c.at[:, dst].set(c[:, src]), caches)
 
 
+@jax.named_scope("repro.lm.cache_swap_out")
+def cache_swap_out(caches, page_ids):
+    """Host-RAM swap tier, device side of swap-OUT: gather the physical
+    pages ``page_ids [R]`` across EVERY layer's pool (leaves are
+    stacked ``[n_layers, n_pages, P, ...]``; see
+    ``kernels/paged.swap_out_kv`` for the single-pool form) into a
+    compact ``[n_layers, R, P, ...]`` staging tree the serve loop then
+    copies to host.  Codes and scale sidecars travel together, so
+    quantised pools swap losslessly.  ``page_ids`` has FIXED ring
+    width — one compile covers every swap transaction."""
+    return jax.tree.map(lambda c: c[:, page_ids], caches)
+
+
+@jax.named_scope("repro.lm.cache_swap_in")
+def cache_swap_in(caches, staged, page_ids):
+    """Host-RAM swap tier, device side of swap-IN: scatter a staged
+    ``[n_layers, R, P, ...]`` page tree back into freshly-allocated
+    physical pages ``page_ids [R]`` across every layer's pool.  The
+    bytes written are exactly the bytes ``cache_swap_out`` read, so a
+    swap→restore round-trip is bit-identical for fp and quantised
+    pools alike; padding rows target the scratch page (id 0)."""
+    return jax.tree.map(
+        lambda c, s: c.at[:, page_ids].set(s.astype(c.dtype)),
+        caches, staged)
+
+
 @jax.named_scope("repro.lm.prefill_chunk")
 def prefill_chunk(params, caches, tokens, start, block_table_row, cfg,
                   last=0):

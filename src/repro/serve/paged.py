@@ -71,6 +71,17 @@ Replaces the dense loop's two dominant costs at once:
     uninterrupted run would, with speculation and quantised KV on.
     (The prefix-cache transfer usually turns the replay into a
     cheap suffix prefill.)
+  * With the host-RAM swap tier on (``cfg.serve_swap``), a victim's
+    written pages can instead be copied device→host (codes + scales —
+    quantised pools swap losslessly) and restored into fresh pages at
+    resume *before* the block table maps them: zero token replay, at
+    the price of two transfers.  ``scheduler.SwapPolicy`` picks
+    recompute-vs-swap per victim from EMA-measured prefill and copy
+    rates; the host store (serve/swap.py) is content-addressed with
+    the radix tree's keys, so swapped prefixes stay shareable and the
+    store may LRU-evict freely (an evicted page only costs recompute).
+    Restores are bit-identical by construction: raw bytes round-trip,
+    nothing is re-quantised.
 
   ``cfg.serve_on_demand_pages=False`` restores worst-case reservation
   (``prompt + max_new`` pages up front): mid-decode exhaustion is
@@ -106,8 +117,9 @@ from repro.models import lm
 from repro.serve.loop import Request
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import (AdmissionError, PoolExhaustedError,
-                                   SchedEntry, Scheduler)
+                                   SchedEntry, Scheduler, SwapPolicy)
 from repro.serve.spec import make_drafter
+from repro.serve.swap import StagingRing, SwapStore
 from repro.serve.telemetry import NULL, Histogram, Telemetry
 
 
@@ -211,6 +223,9 @@ class PagedServeLoop:
                  kv_dtype: Optional[str] = None,
                  on_demand: Optional[bool] = None,
                  preempt_policy: Optional[str] = None,
+                 swap: Optional[bool] = None,
+                 swap_bytes: Optional[int] = None,
+                 swap_policy: Optional[str] = None,
                  check_invariants: Optional[bool] = None,
                  telemetry: Optional[bool] = None,
                  trace_path: Optional[str] = None):
@@ -258,6 +273,28 @@ class PagedServeLoop:
             aging=getattr(cfg, "serve_sched_aging", 64),
             default_priority=getattr(cfg, "serve_priority_default", 0))
         self.queue_limit = int(getattr(cfg, "serve_queue_limit", 0))
+        # host-RAM page swap tier (serve/swap.py): preemption victims'
+        # pages copy device->host and restore at resume instead of
+        # recomputing from tokens; scheduler.SwapPolicy decides per
+        # victim.  `swap=None` follows cfg.serve_swap; off => all three
+        # attributes are None and every swap site below is one `is not
+        # None` check (the telemetry-facade pattern).
+        swap_on = bool(getattr(cfg, "serve_swap", False)
+                       if swap is None else swap)
+        if swap_on:
+            self.swap: Optional[SwapStore] = SwapStore(
+                page_size,
+                max_bytes=int(getattr(cfg, "serve_swap_bytes", 0)
+                              if swap_bytes is None else swap_bytes))
+            self.swap_policy: Optional[SwapPolicy] = SwapPolicy(
+                mode=(getattr(cfg, "serve_swap_policy", "auto")
+                      if swap_policy is None else swap_policy))
+            self.swap_ring: Optional[StagingRing] = StagingRing(
+                width=int(getattr(cfg, "serve_swap_ring_pages", 8)))
+        else:
+            self.swap = None
+            self.swap_policy = None
+            self.swap_ring = None
         self.check_invariants = bool(
             getattr(cfg, "serve_check_invariants", False)
             if check_invariants is None else check_invariants)
@@ -346,6 +383,12 @@ class PagedServeLoop:
         self.resumes = 0              # parked requests re-admitted
         self.resume_prefill_tokens = 0  # chunk tokens replayed at resume
         self.preempted_tokens = 0     # KV positions dropped at preempt
+        # swap-tier traffic counters (the swap bench's numbers)
+        self.swapped_out_pages = 0    # pages landed in the host store
+        self.swapped_in_pages = 0     # host pages restored to device
+        self.swap_out_bytes = 0       # device->host bytes moved
+        self.swap_in_bytes = 0        # host->device bytes moved
+        self.swap_restored_tokens = 0  # positions resumed WITHOUT replay
         self.grown_pages = 0          # on-demand page-boundary allocs
         self.peak_live_slots = 0      # max concurrently live slots
         # per-request time-to-first-token: bounded histogram (running
@@ -386,6 +429,20 @@ class PagedServeLoop:
         self._copy_page = jax.jit(
             lambda c, src, dst: lm.cache_copy_page(c, src, dst),
             donate_argnums=cow_donate)
+        # swap gather/scatter: fixed ring-width page moves, so exactly
+        # one trace each for the loop's lifetime (asserted in
+        # check_compiled; compiled_shapes() stays the three forward
+        # entry points).  Built only with the tier on — an idle loop
+        # carries zero extra jit state.
+        if swap_on:
+            self._swap_gather = jax.jit(
+                lambda c, pids: lm.cache_swap_out(c, pids))
+            self._swap_scatter = jax.jit(
+                lambda c, s, pids: lm.cache_swap_in(c, s, pids),
+                donate_argnums=cow_donate)
+        else:
+            self._swap_gather = None
+            self._swap_scatter = None
 
     # -- admission ----------------------------------------------------------
 
@@ -446,32 +503,38 @@ class PagedServeLoop:
             return self._prefill_blocks(L)
         return self._worst_blocks(L, ent.req.max_new_tokens - len(ent.out))
 
-    def _plan(self, ent: SchedEntry, n_cached: int):
-        """Admission plan given ``n_cached`` matched prefix blocks.
+    def _plan(self, ent: SchedEntry, n_cached: int, n_swap: int = 0):
+        """Admission plan given ``n_cached`` matched prefix blocks and
+        ``n_swap`` consecutive host-store blocks after them.
 
         The first position that must still run the forward pass is
-        ``p0 = min(n_cached * P, L - 1)`` — the last token always
-        reruns (its logits seed decoding), so a fully-cached prompt
-        still prefills its final chunk.  Chunks start on C boundaries,
-        so the first live chunk is ``ci0 = p0 // C``; any *cached*
-        block overlapping the written range ``[ci0*C, ...)`` must be
-        copy-on-write duplicated (the recompute rewrites part of it,
-        and positions below ``ci0*C`` inside it are served by the
-        copy).  Returns (total_blocks, ci0, n_keep, n_cow, need):
-        ``n_keep`` cached blocks stay mapped read-only, ``n_cow`` are
-        duplicated, ``need`` fresh pages cover both CoW copies and all
-        non-cached blocks."""
+        ``p0 = min((n_cached + n_swap) * P, L - 1)`` — the last token
+        always reruns (its logits seed decoding), so a fully-covered
+        prompt still prefills its final chunk.  Chunks start on C
+        boundaries, so the first live chunk is ``ci0 = p0 // C``; any
+        *cached* block overlapping the written range ``[ci0*C, ...)``
+        must be copy-on-write duplicated (the recompute rewrites part
+        of it, and positions below ``ci0*C`` inside it are served by
+        the copy).  Swap-restored blocks never need CoW: they land in
+        freshly-allocated private pages, and a recompute overlapping
+        one rewrites byte-identical KV (the replayed forward is the
+        same pure function of the same tokens).  Returns
+        (total_blocks, ci0, n_keep, n_cow, need, n_swap): ``n_keep``
+        cached blocks stay mapped read-only, ``n_cow`` are duplicated,
+        ``need`` fresh pages cover CoW copies, restored blocks, and
+        all remaining blocks."""
         C, P = self.chunk, self.spec.page_size
         L = len(ent.tokens)
         total = self._admit_blocks(ent)
         n_cached = min(n_cached, total)
-        p0 = min(n_cached * P, L - 1)
+        n_swap = min(n_swap, total - n_cached)
+        p0 = min((n_cached + n_swap) * P, L - 1)
         ci0 = p0 // C
         w0_blk = (ci0 * C) // P
         n_keep = min(n_cached, w0_blk)
         n_cow = n_cached - n_keep
         need = (total - n_cached) + n_cow
-        return total, ci0, n_keep, n_cow, need
+        return total, ci0, n_keep, n_cow, need, n_swap
 
     def _pages_needed(self, req: Request, n_cached: int = 0) -> int:
         """Fresh pages admission must allocate for a fresh ``req``.
@@ -540,8 +603,15 @@ class PagedServeLoop:
         # stats are recorded once per ADMITTED request below
         hits = self.prefix.match(tokens, record=False) \
             if self.prefix is not None else []
-        total, ci0, n_keep, n_cow, need = self._plan(ent, len(hits))
+        # host-store hits fill in AFTER the device hits: only a
+        # consecutive run is mappable, and a block resident on device
+        # is strictly cheaper than restoring its host copy
+        swap_hits = self.swap.match(tokens, start_block=len(hits)) \
+            if self.swap is not None else []
+        total, ci0, n_keep, n_cow, need, n_swap = self._plan(
+            ent, len(hits), len(swap_hits))
         hits = hits[: n_keep + n_cow]
+        swap_hits = swap_hits[:n_swap]
         if hits:
             # hold the matched pages so pressure-eviction (possibly our
             # own, below) can never reclaim them out from under us
@@ -553,10 +623,17 @@ class PagedServeLoop:
             # back to a cache-less admission — drop the locks, evict,
             # and recompute the whole prompt.  Restores the dense-pool
             # liveness guarantee: a request that fits worst-case always
-            # admits once every slot is free.
+            # admits once every slot is free.  Host-store hits pin no
+            # pool pages, so they are re-matched from block 0 — the
+            # content-addressed store may now cover blocks the tree
+            # served before.
             self.pages.release([n.page_id for n in hits])
             hits = []
-            total, ci0, n_keep, n_cow, need = self._plan(ent, 0)
+            swap_hits = self.swap.match(tokens, start_block=0) \
+                if self.swap is not None else []
+            total, ci0, n_keep, n_cow, need, n_swap = self._plan(
+                ent, 0, len(swap_hits))
+            swap_hits = swap_hits[:n_swap]
             page_ids = self._alloc_with_evict(need)
         if page_ids is None:
             return "blocked"              # pool exhausted: request waits
@@ -567,8 +644,11 @@ class PagedServeLoop:
         # preempted -> queued -> resumed on the request's track
         tel.event("queued", rid, t0=tel.rel(ent.t_enqueue), t1=t_adm,
                   preemptions=ent.preemptions)
+        if swap_hits:
+            tel.event("swapped_in", rid, blocks=len(swap_hits))
         tel.event("resumed" if ent.out else "admitted", rid,
-                  cached_blocks=len(hits), fresh_pages=need, cow=n_cow)
+                  cached_blocks=len(hits), restored_blocks=len(swap_hits),
+                  fresh_pages=need, cow=n_cow)
         C, P = self.chunk, self.spec.page_size
         if self.prefix is not None:
             # one lookup record per admitted request (post-fallback:
@@ -592,6 +672,17 @@ class PagedServeLoop:
             self.pages.release([src])     # drop the map reference
             blocks[b] = dst
             shared[b] = False
+        if swap_hits:
+            # scatter the host pages into their freshly-allocated
+            # device pages BEFORE the block table maps them: every
+            # position below the first live chunk must hold canonical
+            # KV by the time the suffix prefill (or first decode)
+            # reads it.  Restored pages are private (shared=False):
+            # they cost fresh pool pages — the tier saves compute,
+            # not memory — so no CoW is ever needed on them.
+            lo = len(hits)
+            self._swap_restore(swap_hits, blocks[lo: lo + len(swap_hits)])
+            self.swap_restored_tokens += len(swap_hits) * P
 
         row = np.zeros(self.spec.max_blocks, np.int32)
         row[:total] = blocks
@@ -599,6 +690,9 @@ class PagedServeLoop:
         bt_row = jnp.asarray(row)
         n_chunks = -(-L // C)
         logits = None
+        # perf_counter, not tel.now(): the NULL facade's clock returns
+        # 0.0, and the swap policy needs real rates with telemetry off
+        t0p = time.perf_counter() if self.swap_policy is not None else 0.0
         for ci in range(ci0, n_chunks):
             buf = np.zeros(C, np.int32)
             seg = tokens[ci * C:(ci + 1) * C]
@@ -623,6 +717,11 @@ class PagedServeLoop:
             self.resumes += 1
             self.resume_prefill_tokens += run_tokens
         tok0 = int(np.asarray(jnp.argmax(logits)))
+        if self.swap_policy is not None and n_chunks > ci0:
+            # the argmax force above synchronised the device, so the
+            # window covers dispatch + execution of every live chunk
+            self.swap_policy.observe_prefill(
+                run_tokens, time.perf_counter() - t0p)
         if not ent.out:
             self.ttft_s.observe(time.monotonic() - ent.t_submit)
         self.lens[slot_i] = L
@@ -654,13 +753,26 @@ class PagedServeLoop:
                        tokens=len(entry["out"]),
                        pages=len(entry["blocks"]))
         blocks = entry["blocks"]
-        n_prompt = len(entry["req"].prompt) // self.spec.page_size
-        if self._prefix_enabled and self.prefix is not None and n_prompt:
-            # the slot's full prompt pages transfer into the radix tree
-            # instead of being freed (insert dedupes against existing
-            # nodes and releases duplicates/map references itself)
-            self.prefix.insert(entry["req"].prompt, blocks[:n_prompt])
-            rest = blocks[n_prompt:]
+        lens = int(self.lens[slot_i])
+        # every fully-written page of prompt + GENERATED tokens
+        # transfers into the radix tree (insert dedupes against
+        # existing nodes and releases duplicates/map references
+        # itself), keyed by the full token history — multi-turn
+        # traffic replays the model's own prior response as part of
+        # the next prompt, and those pages are canonical KV exactly
+        # like a preemption victim's (same accounting as _preempt:
+        # positions [0, lens) are written, the final out token is not)
+        full = np.concatenate([
+            np.asarray(entry["req"].prompt, np.int32),
+            np.asarray(entry["out"], np.int32),
+        ])
+        assert len(full) == lens + 1, \
+            f"slot {slot_i} token accounting diverged at finish: " \
+            f"{len(full)} vs lens {lens} + 1"
+        n_full = lens // self.spec.page_size
+        if self._prefix_enabled and self.prefix is not None and n_full:
+            self.prefix.insert(full, blocks[:n_full])
+            rest = blocks[n_full:]
         else:
             rest = blocks
         if len(rest):
@@ -670,12 +782,22 @@ class PagedServeLoop:
         self.slots[slot_i] = None
 
     def _preempt(self, slot_i: int) -> None:
-        """Park a live slot on pool exhaustion: transfer its full
-        pages into the prefix cache (content-addressed by prompt +
-        generated tokens, so the resume's suffix prefill can map them
-        back read-only — and further pressure can evict them, trading
-        resume cost for pool space), release the rest, and requeue the
-        request with its generated-so-far tokens for recompute-resume."""
+        """Park a live slot on pool exhaustion.  The victim's written
+        full pages go one of two ways:
+
+        - **Swap** (tier on + policy says transfer beats replay): copy
+          them device→host through the staging ring, then release
+          EVERY device page — the whole point is pool space now and
+          zero token replay at resume (the host store serves the pages
+          back, content-addressed by prompt + generated tokens).
+        - **Recompute** (tier off / policy says replay is cheaper):
+          transfer them into the prefix cache (same content keys, so
+          the resume's suffix prefill can map them back read-only —
+          and further pressure can evict them), release the rest.
+
+        Either way the request requeues with its generated-so-far
+        tokens; recompute-resume remains the universal fallback (a
+        swap put refused by the host budget just replays)."""
         entry = self.slots[slot_i]
         ent: SchedEntry = entry["sched"]
         lens = int(self.lens[slot_i])
@@ -691,13 +813,26 @@ class PagedServeLoop:
         # canonical KV (beyond sits the padded-prefill tail / rejected
         # speculative writes): those transfer; the partial tail frees
         n_full = lens // self.spec.page_size
-        if self._prefix_enabled and self.prefix is not None and n_full:
+        swapped = 0
+        if (n_full and self.swap is not None
+                and self.swap_policy.decide(
+                    replay_tokens=lens,
+                    nbytes=n_full * self.page_bytes())):
+            swapped = self._swap_out(full, blocks[:n_full])
+        parked = 0
+        if swapped:
+            # the host copies hold the KV: every device page frees
+            # outright (shared tree pages just drop this slot's map
+            # reference — the tree keeps its own)
+            self.pages.release(list(blocks))
+        elif self._prefix_enabled and self.prefix is not None and n_full:
             self.prefix.insert(full, blocks[:n_full])
+            parked = n_full
             rest = blocks[n_full:]
-        else:
-            rest = blocks
-        if len(rest):
-            self.pages.release(list(rest))
+            if len(rest):
+                self.pages.release(list(rest))
+        elif len(blocks):
+            self.pages.release(list(blocks))
         self.block_table[slot_i] = 0
         self.lens[slot_i] = 0
         self.slots[slot_i] = None
@@ -707,9 +842,103 @@ class PagedServeLoop:
         self.preemptions += 1
         self.preempted_tokens += lens
         self.tel.event("preempted", entry["req"].rid,
-                       tokens_dropped=lens, pages_parked=n_full
-                       if (self._prefix_enabled and self.prefix is not None)
-                       else 0)
+                       tokens_dropped=lens, pages_parked=parked,
+                       pages_swapped=swapped)
+        if swapped:
+            self.tel.event("swapped_out", entry["req"].rid,
+                           pages=swapped, bytes=swapped * self.page_bytes())
+
+    # -- host-RAM swap tier ---------------------------------------------------
+
+    def page_bytes(self) -> int:
+        """Bytes one physical page occupies across every layer's pool
+        (codes + scale sidecars) — the swap policy's transfer-cost
+        unit and the host store's per-page footprint."""
+        return self.kv_pool_bytes() // self.spec.n_pages
+
+    def _swap_out(self, full, blocks) -> int:
+        """Copy written full pages ``blocks`` of token history ``full``
+        device→host through the staging ring and put each page in the
+        content-addressed store.  Returns how many pages are
+        host-resident afterwards; a budget-refused put just costs
+        recompute at resume, never an error.  Ring transactions are
+        fixed-width (short tails pad with the scratch page, whose
+        gathered garbage is sliced off before storing), so the gather
+        compiles exactly once."""
+        ring = self.swap_ring
+        R = ring.width
+        t0 = time.perf_counter()
+        stored = 0
+        bytes0 = self.swap_out_bytes
+        for base in range(0, len(blocks), R):
+            tail = [int(b) for b in blocks[base: base + R]]
+            pids = np.zeros(R, np.int32)     # scratch-page padding
+            pids[: len(tail)] = tail
+            with self.tel.annotate("repro.serve.swap_gather"):
+                dev = self._swap_gather(self.caches, jnp.asarray(pids))
+            for meta, host in ring.stage((base, len(tail)), dev):
+                stored += self._store_staged(full, meta, host)
+        for meta, host in ring.drain():
+            stored += self._store_staged(full, meta, host)
+        moved = self.swap_out_bytes - bytes0
+        if moved:
+            self.swap_policy.observe_copy(moved,
+                                          time.perf_counter() - t0)
+        self.swapped_out_pages += stored
+        if self.tel.enabled and stored:
+            self.tel.inc("swap.out_pages", stored)
+            self.tel.inc("swap.out_bytes", moved)
+        return stored
+
+    def _store_staged(self, full, meta, host) -> int:
+        """Split one matured ring transaction into per-page host copies
+        and store each under its content key.  ``host`` leaves are
+        ``[n_layers, R, page_size, ...]``; the per-page ``.copy()``
+        decouples the page from the transaction buffer so a later
+        store eviction really frees host memory."""
+        base, n = meta
+        stored = 0
+        for j in range(n):
+            page = jax.tree.map(lambda a: a[:, j].copy(), host)
+            if self.swap.put(full, base + j, page):
+                stored += 1
+                self.swap_out_bytes += int(
+                    sum(a.nbytes for a in jax.tree.leaves(page)))
+        return stored
+
+    def _swap_restore(self, host_pages, dest) -> None:
+        """Scatter host pages back into freshly-allocated device pages
+        ``dest``, ring-width transactions (a short tail repeats its
+        last page onto scratch page 0, whose writes are dead by the
+        pool contract — same one-trace discipline as the gather).
+        Lossless by construction: the staged leaves are the raw bytes
+        the gather took (int8/int4 codes, bf16 scales), scattered back
+        with a dtype-preserving set."""
+        R = self.swap_ring.width
+        t0 = time.perf_counter()
+        nbytes = 0
+        for base in range(0, len(host_pages), R):
+            tail = host_pages[base: base + R]
+            pids = np.zeros(R, np.int32)
+            pids[: len(tail)] = dest[base: base + len(tail)]
+            padded = list(tail) + [tail[-1]] * (R - len(tail))
+            staged = jax.tree.map(lambda *xs: np.stack(xs, axis=1),
+                                  *[p.data for p in padded])
+            with self.tel.annotate("repro.serve.swap_scatter"):
+                self.caches = self._swap_scatter(
+                    self.caches, jax.tree.map(jnp.asarray, staged),
+                    jnp.asarray(pids))
+            nbytes += sum(p.nbytes for p in tail)
+        # force the scatters so the observed copy rate is real (the
+        # data dependency alone would already order them before the
+        # first forward that reads the restored pages)
+        jax.block_until_ready(self.caches)
+        self.swap_policy.observe_copy(nbytes, time.perf_counter() - t0)
+        self.swapped_in_pages += len(host_pages)
+        self.swap_in_bytes += nbytes
+        if self.tel.enabled:
+            self.tel.inc("swap.in_pages", len(host_pages))
+            self.tel.inc("swap.in_bytes", nbytes)
 
     def _fill_free_slots(self, mid_decode: bool) -> None:
         """Admit queued requests into every free slot.  A request that
@@ -889,6 +1118,8 @@ class PagedServeLoop:
         self.pages.check()
         if self.prefix is not None:
             self.prefix.check()
+        if self.swap is not None:
+            self.swap.check()
         self.sched.check()
 
     # -- speculative decoding ------------------------------------------------
@@ -1078,6 +1309,9 @@ class PagedServeLoop:
             "resumes": self.resumes,
             "resume_prefill_tokens": self.resume_prefill_tokens,
             "preempted_tokens": self.preempted_tokens,
+            "swapped_out_pages": self.swapped_out_pages,
+            "swapped_in_pages": self.swapped_in_pages,
+            "swap_restored_tokens": self.swap_restored_tokens,
             "grown_pages": self.grown_pages,
             "peak_live_slots": self.peak_live_slots,
             "pool_pages_peak": self.pages.peak,
@@ -1099,6 +1333,29 @@ class PagedServeLoop:
             "cow_copies": self.cow_copies,
             "grown_pages": self.grown_pages,
             "pool_bytes": self.kv_pool_bytes(),
+        }
+
+    def swap_stats(self) -> dict:
+        """Swap-tier accounting (the ``metrics()`` swap subsystem):
+        host-store occupancy, per-victim policy decisions + measured
+        rates, and transfer traffic.  ``restored_tokens`` is the
+        headline — positions resumed WITHOUT token replay (the bench's
+        recompute-tokens-saved metric reads it against the
+        recompute-only baseline's ``resume_prefill_tokens``)."""
+        if self.swap is None:
+            return {"enabled": False}
+        return {
+            "enabled": True,
+            "store": self.swap.stats(),
+            "policy": self.swap_policy.stats(),
+            "ring_width": self.swap_ring.width,
+            "ring_transactions": self.swap_ring.transactions,
+            "swapped_out_pages": self.swapped_out_pages,
+            "swapped_in_pages": self.swapped_in_pages,
+            "swap_out_bytes": self.swap_out_bytes,
+            "swap_in_bytes": self.swap_in_bytes,
+            "restored_tokens": self.swap_restored_tokens,
+            "page_bytes": self.page_bytes(),
         }
 
     def metrics(self) -> dict:
@@ -1123,6 +1380,7 @@ class PagedServeLoop:
                       "quantised": bool(self.kv_spec.quantised),
                       "pool_bytes": self.kv_pool_bytes()},
             "scheduler": self.sched_stats(),
+            "swap": self.swap_stats(),
             "autotune": autotune.snapshot_stats(),
         }
         if self.tel.enabled:
@@ -1162,3 +1420,12 @@ class PagedServeLoop:
         for name, n in self.compiled_shapes().items():
             assert n <= 1, f"{name} forward retraced: {n} shapes"
         assert self._copy_page._cache_size() <= 1, "CoW copy retraced"
+        # the swap gather/scatter are fixed ring-width moves: one trace
+        # each, ever.  They live here rather than in compiled_shapes()
+        # — that dict is the FORWARD compile set the bench gates at
+        # exactly three shapes.
+        if self._swap_gather is not None:
+            assert self._swap_gather._cache_size() <= 1, \
+                "swap gather retraced"
+            assert self._swap_scatter._cache_size() <= 1, \
+                "swap scatter retraced"

@@ -24,6 +24,11 @@ and this module supplies the machinery that makes it survivable:
   first, then most pages held (frees the most), then least progress
   (wastes the least generated work).  ``policy='never'`` disables
   preemption — exhaustion then raises ``PoolExhaustedError``.
+- **Recompute-vs-swap policy.**  With the host-RAM swap tier enabled
+  (``cfg.serve_swap``), ``SwapPolicy`` decides per victim whether to
+  copy its KV pages to host RAM (zero token replay at resume, pays
+  PCIe/ICI transfer twice) or fall back to recompute-resume, from
+  EMA-measured prefill tokens/s and copy bytes/s.
 - **Recompute-resume bookkeeping.**  A preempted slot is parked as a
   ``SchedEntry`` whose ``tokens`` hold the prompt *plus every token
   generated so far*; re-admission replays them through the ordinary
@@ -207,3 +212,81 @@ class Scheduler:
             assert len(e.tokens) > 0, "empty entry in queue"
             assert len(e.out) < getattr(e.req, "max_new_tokens", 1 << 30), \
                 "finished entry still queued"
+
+
+class SwapPolicy:
+    """Per-victim recompute-vs-swap decision from measured rates.
+
+    Swapping a victim out (and later back in) moves its pages over
+    PCIe/ICI twice; recompute-resume replays its tokens through chunked
+    prefill once.  Swap wins exactly when::
+
+        2 * nbytes / copy_bytes_per_s  <  replay_tokens / prefill_tok_per_s
+
+    Both rates are exponential moving averages of what THIS deployment
+    actually measures (``observe_prefill`` wraps the loop's chunked
+    prefill, ``observe_copy`` wraps the staging-ring transfers) — not
+    datasheet numbers, so the crossover tracks the live model size,
+    interconnect, and host load.  Until both rates exist the policy is
+    *optimistic* (swaps) — the only way to learn the copy rate is to
+    pay for one copy, and a wrong early guess costs one transfer, not
+    correctness.
+
+    ``mode='always'`` forces swapping (tests/benches use it to pin the
+    path); ``'never'`` disables it (victims recompute — the PR 6
+    behaviour); ``'auto'`` applies the rate comparison.
+    """
+
+    MODES = ("auto", "always", "never")
+
+    def __init__(self, mode: str = "auto", alpha: float = 0.25):
+        if mode not in self.MODES:
+            raise ValueError(
+                f"swap policy {mode!r} not in {self.MODES}")
+        self.mode = mode
+        self.alpha = float(alpha)
+        self.prefill_tok_per_s = 0.0     # 0.0 == not yet measured
+        self.copy_bytes_per_s = 0.0
+        self.chose_swap = 0
+        self.chose_recompute = 0
+
+    def _ema(self, old: float, sample: float) -> float:
+        return sample if old == 0.0 else \
+            (1.0 - self.alpha) * old + self.alpha * sample
+
+    def observe_prefill(self, tokens: int, dt_s: float) -> None:
+        if tokens > 0 and dt_s > 0.0:
+            self.prefill_tok_per_s = self._ema(
+                self.prefill_tok_per_s, tokens / dt_s)
+
+    def observe_copy(self, nbytes: int, dt_s: float) -> None:
+        if nbytes > 0 and dt_s > 0.0:
+            self.copy_bytes_per_s = self._ema(
+                self.copy_bytes_per_s, nbytes / dt_s)
+
+    def decide(self, replay_tokens: int, nbytes: int) -> bool:
+        """True → swap this victim's pages out; False → recompute."""
+        if self.mode == "never":
+            swap = False
+        elif self.mode == "always":
+            swap = True
+        elif not (self.prefill_tok_per_s and self.copy_bytes_per_s):
+            swap = True                  # optimistic bootstrap: learn rates
+        else:
+            swap_cost_s = 2.0 * nbytes / self.copy_bytes_per_s
+            replay_cost_s = replay_tokens / self.prefill_tok_per_s
+            swap = swap_cost_s < replay_cost_s
+        if swap:
+            self.chose_swap += 1
+        else:
+            self.chose_recompute += 1
+        return swap
+
+    def stats(self) -> dict:
+        return {
+            "mode": self.mode,
+            "prefill_tok_per_s": self.prefill_tok_per_s,
+            "copy_bytes_per_s": self.copy_bytes_per_s,
+            "chose_swap": self.chose_swap,
+            "chose_recompute": self.chose_recompute,
+        }

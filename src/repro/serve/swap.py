@@ -1,0 +1,244 @@
+"""Host-RAM page swap tier: preemption without recompute.
+
+PR 6's preemption path drops a victim's device pages and replays its
+tokens at resume (recompute-resume).  That is the right trade for short
+contexts — prefill is fast and pool pages are the scarce resource — but
+for long contexts replaying thousands of tokens costs far more than
+copying the victim's KV pages over PCIe/ICI once.  This module is the
+storage half of the swap tier:
+
+``SwapStore``
+    A content-addressed host-RAM page store keyed exactly like the
+    radix prefix tree: page *i* of a sequence is keyed by the full
+    token history ``tuple(tokens[:(i+1)*P])``.  The same key discipline
+    means a swapped-out prefix stays addressable to *any* request that
+    shares it, not just the original victim — swap hits compose with
+    radix-tree hits (device hits are consumed first, the store serves
+    the consecutive blocks after them).  Pages are stored as raw host
+    copies of the pool leaves (codes + scales for quantised pools), so
+    the round-trip is lossless **by construction**: int8/int4 codes and
+    bf16 scales are byte-preserved, never re-quantised.
+
+``StagingRing``
+    A bounded ring of in-flight device→host staging transactions.
+    Swap-out dispatches one device gather per fixed-width transaction
+    and defers forcing the host copy until the ring is full (or
+    drained), so device compute and D2H copies overlap up to ``depth``
+    transactions.  JAX's functional arrays make the deferral safe: the
+    gather closed over immutable pool values, and later pool writes
+    produce *new* arrays — the staged value cannot be clobbered.
+
+The loop-side integration (swap-aware ``_preempt``/``_admit``) lives in
+``serve/paged.py``; the per-victim recompute-vs-swap policy lives in
+``serve/scheduler.py`` (:class:`repro.serve.scheduler.SwapPolicy`).
+
+Correctness note: the store is a *cache*, never the only copy of
+anything irreplaceable — a preempted request always retains its token
+history, so an evicted (or budget-refused) host page merely costs
+recompute at resume, exactly like a radix-tree eviction.  That is what
+lets ``max_bytes`` LRU-evict freely and lets swap-out release device
+pages unconditionally.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["HostPage", "SwapStore", "StagingRing"]
+
+
+class HostPage:
+    """One swapped-out KV page: host copies of every pool leaf.
+
+    ``data`` mirrors the stacked-cache structure for a single page —
+    a pytree whose leaves are ``np.ndarray``s of shape
+    ``[n_layers, page_size, ...]`` (codes, and scales for quantised
+    pools).  ``nbytes`` is the exact host footprint used by the
+    store's budget ledger.
+    """
+
+    __slots__ = ("key", "data", "nbytes", "tick")
+
+    def __init__(self, key: Tuple[int, ...], data, tick: int):
+        self.key = key
+        self.data = data
+        self.nbytes = int(sum(a.nbytes for a in jax.tree.leaves(data)))
+        self.tick = tick
+
+    def __repr__(self):  # pragma: no cover - debug aid
+        return f"HostPage(len={len(self.key)}, nbytes={self.nbytes})"
+
+
+class SwapStore:
+    """Content-addressed host-RAM store of swapped KV pages.
+
+    Keys are radix-tree-compatible: ``tuple(tokens[:(i+1)*P])`` for
+    block index *i* — the full token history up to and including the
+    page, so identical prefixes from different requests dedupe to one
+    host page and a restored prefix serves any future request that
+    shares it.
+
+    ``max_bytes == 0`` means unbounded; otherwise puts LRU-evict until
+    the new page fits (a page larger than the whole budget is refused).
+    """
+
+    def __init__(self, page_size: int, max_bytes: int = 0):
+        self.page_size = int(page_size)
+        self.max_bytes = int(max_bytes)
+        self.entries: Dict[Tuple[int, ...], HostPage] = {}
+        self.bytes = 0
+        self._tick = 0
+        # counters (exported via stats())
+        self.puts = 0
+        self.dup_puts = 0
+        self.refused_puts = 0
+        self.hit_blocks = 0
+        self.miss_lookups = 0
+        self.evicted_pages = 0
+        self.evicted_bytes = 0
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def _key(self, tokens, i: int) -> Tuple[int, ...]:
+        return tuple(int(t) for t in tokens[: (i + 1) * self.page_size])
+
+    # -- writes ---------------------------------------------------------
+
+    def put(self, tokens, i: int, data) -> bool:
+        """Store host page ``data`` for block *i* of ``tokens``.
+
+        Returns True if the page is resident after the call (including
+        the dedupe case), False if the budget refused it.  Never raises
+        on budget pressure — a refused put only costs recompute later.
+        """
+        key = self._key(tokens, i)
+        self._tick += 1
+        hit = self.entries.get(key)
+        if hit is not None:
+            hit.tick = self._tick        # refresh LRU; bytes unchanged
+            self.dup_puts += 1
+            return True
+        page = HostPage(key, data, self._tick)
+        if self.max_bytes:
+            if page.nbytes > self.max_bytes:
+                self.refused_puts += 1
+                return False
+            self._evict_to(self.max_bytes - page.nbytes)
+        self.entries[key] = page
+        self.bytes += page.nbytes
+        self.puts += 1
+        return True
+
+    def _evict_to(self, budget: int) -> int:
+        """LRU-evict whole pages until ``bytes <= budget``."""
+        n = 0
+        while self.bytes > budget and self.entries:
+            key = min(self.entries, key=lambda k: self.entries[k].tick)
+            page = self.entries.pop(key)
+            self.bytes -= page.nbytes
+            self.evicted_pages += 1
+            self.evicted_bytes += page.nbytes
+            n += 1
+        return n
+
+    # -- reads ----------------------------------------------------------
+
+    def match(self, tokens, start_block: int = 0) -> List[HostPage]:
+        """Longest run of consecutively-stored blocks from ``start_block``.
+
+        Mirrors ``PrefixCache.match``: only *consecutive* blocks are
+        usable (a gap would leave an unwritten hole in the middle of
+        the mapped range).  ``start_block`` lets the caller consume
+        device radix-tree hits first and fill in from the store after.
+        Matching refreshes LRU ticks — a hot swapped prefix should
+        outlive cold ones.
+        """
+        P = self.page_size
+        n_blocks = len(tokens) // P
+        out: List[HostPage] = []
+        for i in range(start_block, n_blocks):
+            page = self.entries.get(self._key(tokens, i))
+            if page is None:
+                break
+            self._tick += 1
+            page.tick = self._tick
+            out.append(page)
+        if out:
+            self.hit_blocks += len(out)
+        else:
+            self.miss_lookups += 1
+        return out
+
+    # -- bookkeeping -----------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "pages": len(self.entries),
+            "bytes": self.bytes,
+            "max_bytes": self.max_bytes,
+            "puts": self.puts,
+            "dup_puts": self.dup_puts,
+            "refused_puts": self.refused_puts,
+            "hit_blocks": self.hit_blocks,
+            "miss_lookups": self.miss_lookups,
+            "evicted_pages": self.evicted_pages,
+            "evicted_bytes": self.evicted_bytes,
+        }
+
+    def check(self) -> None:
+        """Invariant audit (mirrors PageManager.check / PrefixCache.check)."""
+        ledger = sum(p.nbytes for p in self.entries.values())
+        assert ledger == self.bytes, \
+            f"swap byte ledger drift: {self.bytes} != {ledger}"
+        if self.max_bytes:
+            assert self.bytes <= self.max_bytes, \
+                f"swap store over budget: {self.bytes} > {self.max_bytes}"
+        for key, page in self.entries.items():
+            assert len(key) % self.page_size == 0 and len(key) > 0, \
+                f"swap key length {len(key)} not a page multiple"
+            assert page.key == key
+
+
+class StagingRing:
+    """Bounded ring of in-flight device→host staging transactions.
+
+    Each transaction is ``(meta, device_tree)`` where ``device_tree``
+    holds the (async-dispatched) gathered pages still on device.  The
+    ring holds up to ``depth`` transactions before forcing the oldest
+    to host — ``stage`` returns the matured ``(meta, host_tree)`` pairs
+    (host leaves are ``np.ndarray``), ``drain`` flushes the rest.  With
+    ``depth >= 2`` the gather for transaction *n+1* dispatches while
+    transaction *n*'s D2H copy completes.
+    """
+
+    def __init__(self, width: int, depth: int = 2):
+        assert width >= 1 and depth >= 1
+        self.width = int(width)     # pages per transaction (fixed: one trace)
+        self.depth = int(depth)
+        self._ring: List[tuple] = []
+        self.transactions = 0
+
+    @staticmethod
+    def _force(item):
+        meta, dev = item
+        # np.asarray blocks until the dispatched gather lands on host;
+        # per-page slicing downstream copies out of this buffer.
+        return meta, jax.tree.map(np.asarray, dev)
+
+    def stage(self, meta, device_tree) -> List[tuple]:
+        """Enqueue one transaction; return any that matured to host."""
+        self._ring.append((meta, device_tree))
+        self.transactions += 1
+        out = []
+        while len(self._ring) > self.depth:
+            out.append(self._force(self._ring.pop(0)))
+        return out
+
+    def drain(self) -> List[tuple]:
+        out = [self._force(it) for it in self._ring]
+        self._ring.clear()
+        return out

@@ -239,18 +239,27 @@ class MetricsRegistry:
 # in LIFECYCLE[event N] (None keys the start state).  ``queued`` is a
 # SPAN covering the wait (emitted at admission, so it follows
 # ``preempted`` in emission order on a resume); ``admitted`` marks a
-# first admission, ``resumed`` a recompute-resume re-admission.
+# first admission, ``resumed`` a resume re-admission (recompute or
+# swap-restore).  The swap tier adds two states: ``swapped_out``
+# follows ``preempted`` when the victim's pages were copied to host
+# RAM instead of dropped, and ``swapped_in`` follows ``queued`` when
+# admission restored host pages before mapping the block table
+# (``admitted`` is also legal after ``swapped_in`` — the store is
+# content-addressed, so a *fresh* request can hit another request's
+# swapped prefix).
 LIFECYCLE: Dict[Optional[str], set] = {
     None: {"submit"},
     "submit": {"queued"},
-    "queued": {"admitted", "resumed"},
+    "queued": {"admitted", "resumed", "swapped_in"},
     "admitted": {"prefill_chunk"},
     "resumed": {"prefill_chunk"},
+    "swapped_in": {"admitted", "resumed"},
     "prefill_chunk": {"prefill_chunk", "decode", "verify", "finished",
                       "preempted"},
     "decode": {"decode", "verify", "finished", "preempted"},
     "verify": {"decode", "verify", "finished", "preempted"},
-    "preempted": {"queued"},
+    "preempted": {"queued", "swapped_out"},
+    "swapped_out": {"queued"},
     "finished": set(),
 }
 

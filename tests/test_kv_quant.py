@@ -65,6 +65,62 @@ def test_int4_pack_roundtrip_lossless():
     assert np.array_equal(np.asarray(out), np.asarray(codes))
 
 
+def test_int4_pack_unpack_exact_every_code_pair():
+    """Exhaustive: all 256 (even, odd) nibble pairs in [-8, 7]^2
+    survive pack → unpack exactly — including -8 (nibble 0x8, the
+    sign-extension edge the ISSUE 9 audit targeted) at BOTH positions.
+    The random fuzz above samples; this closes the codec question."""
+    lo, hi = np.meshgrid(np.arange(-8, 8), np.arange(-8, 8))
+    codes = jnp.asarray(np.stack([lo.ravel(), hi.ravel()], -1), jnp.int8)
+    out = np.asarray(paged.unpack_int4(paged.pack_int4(codes)))
+    assert np.array_equal(out, np.asarray(codes))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       w=st.integers(min_value=1, max_value=9))
+def test_int4_pack_unpack_fuzz_positions(seed, w):
+    """Position fuzz: arbitrary shapes/widths keep every code — the
+    packer's even/odd interleave must never mix lanes."""
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(-8, 8, size=(2, 3, 2 * w)), jnp.int8)
+    out = np.asarray(paged.unpack_int4(paged.pack_int4(codes)))
+    assert np.array_equal(out, np.asarray(codes))
+
+
+def test_int4_scheme_reaches_minus8_and_error_floor_documented():
+    """The ISSUE 9 headline audit, resolved as scheme-bound, not bug:
+
+    - pack/unpack is exact over every code pair (tests above);
+    - the quantiser now REACHES the -8 two's-complement code (scale
+      ``amax / 7.5``, clip [-8, 7] — the old ±7 clip at ``amax / 7``
+      wasted it, costing ``amax / 14`` worst-case vs ``amax / 15``);
+    - what remains (0.225 rel logit err on the pinned bench workload,
+      CI-gated <= 0.30) is the FLOOR of per-token absmax int4: the
+      worst per-element error sits at half a grid step, ``~amax/15``
+      — ~13x coarser than int8's ``amax/254`` — so ``<= 0.05`` logit
+      error and greedy match with fp are unreachable for any pure
+      4-bit per-(token, head) storage, only for finer-grained scales
+      (group-wise sidecars) or more bits.
+
+    This test pins both halves: the -8 code is emitted, and the
+    empirical worst-case round-trip error brackets the grid floor
+    from BOTH sides (a future "fix" that silently narrows the range
+    again fails the lower bracket; a broken codec fails the upper)."""
+    qs = paged.KVQuantSpec("int4")
+    # an element at -amax maps to round(-7.5) -> -8 (clip keeps it)
+    x = jnp.asarray([[1.0, -2.0, 0.5, -0.25]], jnp.float32)
+    codes, _ = paged.quantise_kv(x, qs)
+    assert np.asarray(paged.unpack_int4(codes)).min() == -8
+    rng = np.random.default_rng(0)
+    big = jnp.asarray(rng.normal(size=(512, 64)), jnp.float32)
+    out = np.asarray(paged.kv_roundtrip(big, qs))
+    amax = np.max(np.abs(np.asarray(big)), -1, keepdims=True)
+    rel = np.abs(out - np.asarray(big)) / amax
+    assert rel.max() <= 1.0 / 15.0 + 2.0 ** -7 + 1e-6   # half step + bf16
+    assert rel.max() >= 1.0 / 25.0                       # the floor is real
+
+
 @settings(max_examples=30, deadline=None)
 @given(seed=st.integers(min_value=0, max_value=10_000),
        hd=st.sampled_from([2, 4, 8, 16, 64, 128]),

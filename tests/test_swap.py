@@ -1,0 +1,316 @@
+"""Host-RAM page swap tier (this PR's tentpole surface: serve/swap.py
++ scheduler.SwapPolicy + the swap-aware _preempt/_admit path).
+
+Three contracts:
+
+- **Swap → restore is invisible to the math.**  Under a pool sized to
+  force mid-decode preemptions with the swap path pinned on
+  (``swap_policy='always'``), every output must be BIT-IDENTICAL to
+  the solo dense oracle across {fp, int8, int4} KV × speculation
+  on/off — the host round-trip moves raw bytes (codes + scales), never
+  re-quantises, and restored pages land before the block table maps
+  them.  The compile set stays at the usual three forward shapes plus
+  one fixed-width gather and one scatter; no page leaks; the traced
+  lifecycle (preempted → swapped_out → queued → swapped_in → resumed)
+  parses against the grammar.
+- **The store is a cache, never the only copy.**  A host budget too
+  small to hold anything degrades to plain recompute-resume with the
+  same bit-identical outputs (a refused/evicted host page only costs
+  replay tokens — exactly like a radix-tree eviction).
+- **Finished requests park their GENERATED pages too.**  The _finish
+  fix: a multi-turn replay of prompt + the model's own response hits
+  the radix tree across the generated pages, not just the prompt
+  pages (the regression ISSUE 9 names).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.kernels import paged
+from repro.models import lm
+from repro.serve import telemetry as tel_mod
+from repro.serve.loop import Request, ServeLoop
+from repro.serve.paged import PagedServeLoop
+from repro.serve.scheduler import SwapPolicy
+from repro.serve.swap import StagingRing, SwapStore
+
+S_MAX = 48
+LENGTHS = (6, 11, 3, 9, 5)
+MAX_NEW = (12, 10, 8, 11, 9)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = smoke_config("codeqwen1.5-7b")
+    params, _ = lm.init_lm(jax.random.PRNGKey(0), cfg, purpose="serve")
+    return cfg, params
+
+
+def _workload(cfg):
+    rng = np.random.default_rng(7)
+    return [(rng.integers(0, cfg.vocab, n).astype(np.int32), mn)
+            for n, mn in zip(LENGTHS, MAX_NEW)]
+
+
+_oracle_cache: dict = {}
+
+
+def _oracle(params, cfg, kv="fp"):
+    """Solo dense-loop output per request, cached per KV dtype (the
+    uninterrupted run every swapped run must reproduce exactly)."""
+    if kv not in _oracle_cache:
+        c = dataclasses.replace(cfg, serve_kv_dtype=kv)
+        solo = ServeLoop(params, c, batch_slots=1, s_max=S_MAX)
+        for i, (p, mn) in enumerate(_workload(cfg)):
+            solo.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn))
+            solo.run()
+        _oracle_cache[kv] = {r.rid: r.output for r in solo.done}
+    return _oracle_cache[kv]
+
+
+# ---------------------------------------------------------------------------
+# SwapStore / StagingRing / SwapPolicy units
+# ---------------------------------------------------------------------------
+
+
+def _page(v, nbytes=8):
+    """A tiny fake host page pytree (one int8 leaf of ``nbytes``)."""
+    return [{"k": np.full((2, nbytes // 2), v, np.int8)}]
+
+
+def test_swap_store_content_addressing_and_match():
+    store = SwapStore(page_size=4)
+    toks = np.arange(12, dtype=np.int32)
+    assert store.put(toks, 0, _page(0)) and store.put(toks, 1, _page(1))
+    assert store.put(toks, 0, _page(0))          # content dedupe
+    assert store.stats()["dup_puts"] == 1
+    assert store.stats()["pages"] == 2
+    m = store.match(toks)
+    assert len(m) == 2 and m[0].data[0]["k"][0, 0] == 0
+    # a different continuation shares exactly the common-history block
+    toks2 = np.concatenate([toks[:4], np.full(8, 99, np.int32)])
+    assert len(store.match(toks2)) == 1
+    # start_block consumes device hits first; a gap ends the run
+    assert len(store.match(toks, start_block=1)) == 1
+    assert store.match(toks, start_block=2) == []
+    store.check()
+
+
+def test_swap_store_lru_budget_eviction_and_refusal():
+    nb = len(jax.tree.leaves(_page(0))[0].tobytes())
+    store = SwapStore(page_size=4, max_bytes=2 * nb)
+    t = np.arange(12, dtype=np.int32)
+    assert store.put(t, 0, _page(0)) and store.put(t, 1, _page(1))
+    store.match(t[:4])                  # touch block 0: block 1 is LRU
+    assert store.put(t, 2, _page(2))    # evicts block 1
+    assert len(store.match(t)) == 1     # 0 resident, 1 gone: run stops
+    s = store.stats()
+    assert s["evicted_pages"] == 1 and s["bytes"] == 2 * nb
+    store.check()
+    # a page larger than the whole budget is refused, not an error
+    tiny = SwapStore(page_size=4, max_bytes=nb - 1)
+    assert not tiny.put(t, 0, _page(0))
+    assert tiny.stats()["refused_puts"] == 1 and len(tiny) == 0
+
+
+def test_staging_ring_depth_and_maturity_order():
+    ring = StagingRing(width=2, depth=2)
+    assert ring.stage((0, 2), {"a": jnp.arange(4)}) == []
+    assert ring.stage((2, 2), {"a": jnp.arange(4) + 4}) == []
+    out = ring.stage((4, 1), {"a": jnp.arange(4) + 8})
+    assert len(out) == 1 and out[0][0] == (0, 2)
+    assert isinstance(out[0][1]["a"], np.ndarray)     # forced to host
+    rest = ring.drain()
+    assert [m for m, _ in rest] == [(2, 2), (4, 1)]
+    assert ring.transactions == 3 and ring.drain() == []
+
+
+def test_swap_policy_modes_bootstrap_and_crossover():
+    assert not SwapPolicy("never").decide(10_000, 1)
+    assert SwapPolicy("always").decide(1, 10 ** 12)
+    with pytest.raises(ValueError, match="swap policy"):
+        SwapPolicy("sometimes")
+    p = SwapPolicy("auto")
+    assert p.decide(100, 100)           # optimistic bootstrap: learn rates
+    p.observe_prefill(1000, 1.0)        # 1000 tok/s
+    p.observe_copy(1_000_000, 1.0)      # 1 MB/s
+    # 2 * 100 KB / 1 MB/s = 0.2 s transfer vs 1 s / 0.01 s replay
+    assert p.decide(1000, 100_000)
+    assert not p.decide(10, 100_000)
+    s = p.stats()
+    assert s["chose_swap"] == 2 and s["chose_recompute"] == 1
+    p.observe_prefill(4000, 1.0)        # EMA moves toward the new sample
+    assert 1000 < p.prefill_tok_per_s < 4000
+
+
+# ---------------------------------------------------------------------------
+# kernel-level page round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", ["fp", "int8", "int4"])
+def test_swap_kv_page_roundtrip_byte_identical(dtype):
+    """swap_out_kv → host → swap_in_kv restores every leaf (codes AND
+    scale sidecars) byte-for-byte, including into DIFFERENT physical
+    pages — the tier never re-quantises."""
+    qs = paged.KVQuantSpec(dtype)
+    spec = paged.spec_for(32, 2, page_size=8)
+    kv = paged.zero_kv_pool(spec, KV=2, hd=16, qspec=qs)
+    rng = np.random.default_rng(3)
+    kv = {name: jnp.asarray(
+        rng.integers(-8, 8, size=leaf.shape).astype(np.asarray(leaf).dtype)
+        if np.asarray(leaf).dtype == np.int8
+        else rng.normal(size=leaf.shape)).astype(leaf.dtype)
+        for name, leaf in kv.items()}
+    src = jnp.asarray([2, 5, 3], jnp.int32)
+    dst = jnp.asarray([6, 1, 4], jnp.int32)
+    staged = jax.tree.map(np.asarray, paged.swap_out_kv(kv, src))
+    restored = paged.swap_in_kv(kv, staged, dst)
+    for name in kv:
+        a = np.asarray(kv[name])[np.asarray(src)]
+        b = np.asarray(restored[name])[np.asarray(dst)]
+        assert a.dtype == b.dtype and np.array_equal(a, b), name
+
+
+# ---------------------------------------------------------------------------
+# serve-level oracle matrix
+# ---------------------------------------------------------------------------
+
+
+def _swap_loop(params, cfg, kv, spec_k, **kw):
+    c = dataclasses.replace(cfg, serve_kv_dtype=kv)
+    return PagedServeLoop(params, c, batch_slots=4, s_max=S_MAX,
+                          page_size=8, chunk=8, n_pages=7,
+                          spec_k=spec_k, swap=True,
+                          check_invariants=True, telemetry=True, **kw)
+
+
+@pytest.mark.parametrize("kv", ["fp", "int8", "int4"])
+@pytest.mark.parametrize("spec_k", [0, 3])
+def test_forced_swap_restore_bitexact_vs_dense_oracle(served, kv, spec_k):
+    """The acceptance matrix: a 6-usable-page pool forces mid-decode
+    preemptions, the policy pins the swap path, and every output must
+    equal the solo dense oracle's — while pages actually travel
+    through the host store and the compile/lifecycle/pool invariants
+    all hold."""
+    cfg, params = served
+    loop = _swap_loop(params, cfg, kv, spec_k, swap_policy="always")
+    for i, (p, mn) in enumerate(_workload(cfg)):
+        loop.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn))
+    loop.run()
+    oracle = _oracle(params, cfg, kv)
+    for r in loop.done:
+        assert np.array_equal(r.output, oracle[r.rid]), \
+            f"rid {r.rid} diverged under swap ({kv}, spec_k={spec_k})"
+    assert loop.preemptions > 0, "pool never exhausted: test is vacuous"
+    ss = loop.swap_stats()
+    assert ss["swapped_out_pages"] > 0 and ss["swapped_in_pages"] > 0
+    assert ss["restored_tokens"] > 0
+    assert ss["store"]["bytes"] == sum(
+        p_.nbytes for p_ in loop.swap.entries.values())
+    loop.check_compiled()
+    loop.pages.check()
+    tel_mod.validate_lifecycle(loop.tel.tracer.events)
+    names = [e["name"] for e in loop.tel.tracer.events]
+    assert "swapped_out" in names and "swapped_in" in names
+
+
+def test_zero_budget_degrades_to_recompute_bitexact(served):
+    """max_bytes too small for one page: every put is refused, outputs
+    still match the oracle (recompute fallback), nothing host-resident."""
+    cfg, params = served
+    loop = _swap_loop(params, cfg, "int8", 0, swap_policy="always",
+                      swap_bytes=1)
+    for i, (p, mn) in enumerate(_workload(cfg)):
+        loop.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn))
+    loop.run()
+    oracle = _oracle(params, cfg, "int8")
+    for r in loop.done:
+        assert np.array_equal(r.output, oracle[r.rid])
+    assert loop.preemptions > 0
+    ss = loop.swap_stats()
+    assert ss["swapped_out_pages"] == 0 and ss["swapped_in_pages"] == 0
+    assert ss["store"]["refused_puts"] > 0
+    loop.pages.check()
+
+
+def test_swap_auto_policy_runs_and_measures(served):
+    """'auto' mode end-to-end: rates get measured, decisions counted,
+    outputs stay bit-exact whichever way each victim went."""
+    cfg, params = served
+    loop = _swap_loop(params, cfg, "fp", 0, swap_policy="auto")
+    for i, (p, mn) in enumerate(_workload(cfg)):
+        loop.submit(Request(rid=i, prompt=p.copy(), max_new_tokens=mn))
+    loop.run()
+    oracle = _oracle(params, cfg, "fp")
+    for r in loop.done:
+        assert np.array_equal(r.output, oracle[r.rid])
+    pol = loop.swap_stats()["policy"]
+    assert pol["prefill_tok_per_s"] > 0
+    assert pol["chose_swap"] + pol["chose_recompute"] == loop.preemptions \
+        or loop.preemptions == 0
+    loop.pages.check()
+
+
+def test_swap_off_has_no_swap_state(served):
+    """The default loop carries zero swap machinery: no store, no extra
+    jits, metrics report the tier disabled."""
+    cfg, params = served
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=S_MAX,
+                          page_size=8, chunk=8)
+    assert loop.swap is None and loop._swap_gather is None
+    assert loop.metrics()["swap"] == {"enabled": False}
+    loop.check_compiled()
+
+
+# ---------------------------------------------------------------------------
+# _finish parks generated pages (multi-turn replay regression)
+# ---------------------------------------------------------------------------
+
+
+def test_finish_parks_generated_pages_for_multiturn_replay(served):
+    """ISSUE 9 satellite: a finished request's fully-written GENERATED
+    pages must enter the radix tree (previously prompt pages only), so
+    replaying prompt + the model's own response — the multi-turn agent
+    pattern — prefills only the new suffix."""
+    cfg, params = served
+    P = 8
+    loop = PagedServeLoop(params, cfg, batch_slots=2, s_max=96,
+                          page_size=P, chunk=P, check_invariants=True)
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    loop.submit(Request(rid=0, prompt=prompt.copy(), max_new_tokens=16))
+    loop.run()
+    out = loop.done[0].output
+    assert len(out) == 16
+    full = np.concatenate([prompt, out.astype(np.int32)])
+    # written positions at finish: [0, len(prompt) + len(out) - 1) —
+    # the final emitted token never wrote KV, so its page can only be
+    # parked if already full.  3 full pages here: 2 prompt + 1 generated.
+    n_full = (len(full) - 1) // P
+    assert n_full > len(prompt) // P, "workload must cross a generated page"
+    hits = loop.prefix.match(full, record=False)
+    assert len(hits) >= n_full, \
+        f"tree holds {len(hits)} blocks of the turn, expected >= {n_full}"
+    # turn 2 replays the whole first exchange plus a user follow-up
+    follow = rng.integers(0, cfg.vocab, 5).astype(np.int32)
+    turn2 = np.concatenate([full, follow])
+    saved0 = loop.prefill_tokens_saved
+    loop.submit(Request(rid=1, prompt=turn2.copy(), max_new_tokens=6))
+    loop.run()
+    assert loop.prefill_tokens_saved - saved0 >= (n_full * P // loop.chunk
+                                                  ) * loop.chunk
+    # and the cached replay is bit-identical to a cold dense run
+    solo = ServeLoop(params, cfg, batch_slots=1, s_max=96)
+    solo.submit(Request(rid=1, prompt=turn2.copy(), max_new_tokens=6))
+    solo.run()
+    got = {r.rid: r.output for r in loop.done}
+    assert np.array_equal(got[1], solo.done[0].output)
+    loop.pages.check()
+    if loop.prefix is not None:
+        loop.prefix.check()
