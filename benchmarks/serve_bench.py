@@ -107,6 +107,20 @@ Two measurements:
    policy check that never fires).  The swap loop's compile set is
    re-asserted: three forward shapes plus one fixed-width gather and
    one scatter.
+
+9. **Chaos scenario.**  The identical workload (quantised KV +
+   speculation + swap, a preemption-forcing pool, two tenants) run
+   clean and then under a fixed-seed ``FaultPlan`` arming every fault
+   site — injected pool exhaustion, host-store refusals, torn swap
+   pages, admission stalls, and client cancels (serve/faults.py).  CI
+   gates: every request the chaotic run *completed* is bit-identical
+   to the no-fault run (``completed_outputs_identical``); every torn
+   page was caught by its checksum at swap-in and recovered via
+   recompute (``corruptions_injected`` > 0 with
+   ``corruptions_detected`` <= injected and zero corrupt pages ever
+   scattered); every non-completion carries a typed reason; and after
+   the drain the page pool and host byte ledger are exact
+   (``zero_page_leaks``).
 """
 
 from __future__ import annotations
@@ -793,6 +807,94 @@ def _spec_scenario(params, cfg, quiet, fast):
     return doc
 
 
+def _chaos_scenario(params, cfg, quiet, fast):
+    """Fault-injection chaos soak (module docstring item 9): the same
+    workload clean vs under a seeded all-sites FaultPlan, with the
+    never-crash / bit-exact-or-typed-reason / zero-leak gates."""
+    from repro.serve.faults import FaultPlan
+    from repro.serve.scheduler import (CancelledError,
+                                       DeadlineExceededError)
+
+    P = C = 16
+    s_max = 128
+    n_pages = 13                      # 12 usable: forces preemptions
+    B = 8
+    max_new = 24 if fast else 40
+    n_req = 8 if fast else 10
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, 32).astype(np.int32)
+               for _ in range(n_req)]
+    rates = {"alloc": 0.15, "swap_put": 0.25, "swap_corrupt": 0.5,
+             "admit_stall": 0.1, "cancel": 0.03}
+
+    def build(plan):
+        c = dataclasses.replace(cfg, serve_kv_dtype="int8",
+                                serve_check_invariants=True)
+        loop = PagedServeLoop(
+            params, c, batch_slots=B, s_max=s_max, page_size=P, chunk=C,
+            n_pages=n_pages, spec_k=3, swap=True, swap_policy="always",
+            tenant_page_quota=6, faults=plan)
+        for i, p in enumerate(prompts):
+            loop.submit(Request(rid=i, prompt=p.copy(),
+                                max_new_tokens=max_new,
+                                tenant="a" if i % 2 == 0 else "b",
+                                deadline_s=600.0))
+        loop.run()
+        return loop
+
+    clean = build(None)
+    chaos = build(FaultPlan(seed=0, rates=rates))
+    clean_out = {r.rid: r.output for r in clean.done}
+    assert len(clean.done) == n_req and not clean.failed
+    # every completion under chaos is bit-identical to the clean run
+    identical = all(np.array_equal(r.output, clean_out[r.rid])
+                    for r in chaos.done)
+    assert identical, "a chaotic completion diverged from the clean run"
+    # every non-completion carries a typed reason + a clean-run prefix
+    for r in chaos.failed:
+        assert isinstance(r.error, (CancelledError,
+                                    DeadlineExceededError))
+        assert np.array_equal(r.output, clean_out[r.rid][:len(r.output)])
+    assert len(chaos.done) + len(chaos.failed) == n_req
+    fired = chaos.faults.stats()["fired"]
+    st = chaos.swap.stats()
+    assert sum(fired.values()) > 0, "chaos run fired nothing: vacuous"
+    assert st["corrupt_dropped"] <= fired["swap_corrupt"]
+    chaos.check_compiled()
+    chaos.pages.check()
+    # zero leaks: dropping the radix tree must return every pool page,
+    # and the host store's byte ledger must recompute exactly
+    for loop in (clean, chaos):
+        if loop.prefix is not None:
+            loop.prefix.evict(10 ** 6)
+        loop.swap.check()
+    zero_leaks = clean.pages.in_use == 0 and chaos.pages.in_use == 0
+    assert zero_leaks, "pool pages leaked after drain"
+
+    doc = {
+        "n_requests": n_req,
+        "seed": 0,
+        "rates": rates,
+        "clean_completed": len(clean.done),
+        "chaos_completed": len(chaos.done),
+        "chaos_cancelled": chaos.cancelled,
+        "chaos_expired": chaos.expired,
+        "faults_fired": fired,
+        "corruptions_injected": fired["swap_corrupt"],
+        "corruptions_detected": st["corrupt_dropped"],
+        "completed_outputs_identical": bool(identical),
+        "zero_page_leaks": bool(zero_leaks),
+        "tenants": chaos.tenant_stats(),
+    }
+    if not quiet:
+        csv_row("chaos", "completed", "cancelled", "torn_pages",
+                "caught", "identical")
+        csv_row("seed0_int8", len(chaos.done), chaos.cancelled,
+                fired["swap_corrupt"], st["corrupt_dropped"],
+                identical)
+    return doc
+
+
 def _telemetry_scenario(params, cfg, quiet, fast, trace_path=None):
     """Observability scenario (module docstring item 7): one traced
     run covering all six subsystems, plus the telemetry-overhead gate.
@@ -891,6 +993,7 @@ def run(quiet=False, json_path=None, fast=False):
     kv_quant = _kv_quant_scenario(params, cfg, S_max, quiet, fast)
     sched = _sched_scenario(params_c, cfg_c, quiet, fast)
     swap = _swap_scenario(params_c, cfg_c, quiet, fast)
+    chaos = _chaos_scenario(params_c, cfg_c, quiet, fast)
     spec = _spec_scenario(params_c, cfg_c, quiet, fast)
     trace_path = (json_path.replace(".json", "_trace.json")
                   if json_path else None)
@@ -910,6 +1013,7 @@ def run(quiet=False, json_path=None, fast=False):
         "kv_quant": kv_quant,
         "scheduler": sched,
         "swap_tier": swap,
+        "chaos": chaos,
         "spec_decode": spec,
         "telemetry": telem,
         # which autotune keys this run touched (diagnosable artifacts:

@@ -91,6 +91,19 @@ def main():
                     help="host swap store budget in bytes (LRU-evicted "
                          "beyond it; evicted pages just cost recompute; "
                          "0 = unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request TTL in milliseconds from submit: "
+                         "a request past it is shed at the next step "
+                         "boundary with DeadlineExceededError and its "
+                         "partial output (0 = no deadline; needs a gqa "
+                         "arch)")
+    ap.add_argument("--tenant", action="append", default=None,
+                    metavar="NAME",
+                    help="tenant label(s) to spread requests across "
+                         "round-robin (repeatable); prints each "
+                         "tenant's page/queue/swap footprint and "
+                         "terminal counters from loop.metrics() after "
+                         "the drain (needs a gqa arch)")
     ap.add_argument("--reserved", action="store_true",
                     help="worst-case page reservation at admission "
                          "(cfg.serve_on_demand_pages=False): exhaustion "
@@ -105,8 +118,10 @@ def main():
                          "metrics summary printed per impl")
     args = ap.parse_args()
     if ((args.shared_prefix or args.spec_k or args.kv_dtype != "fp"
-            or args.swap) and args.arch == "xlstm-350m"):
+            or args.swap or args.deadline_ms or args.tenant)
+            and args.arch == "xlstm-350m"):
         args.arch = "codeqwen1.5-7b"      # needs a paged-capable family
+    tenants = args.tenant or [None]
 
     for impl in ("dense", "int8", "tlmac"):
         cfg = dataclasses.replace(smoke_config(args.arch), serve_impl=impl)
@@ -130,15 +145,19 @@ def main():
             loop = ServeLoop(params, cfg, batch_slots=3, s_max=64)
         rng = np.random.default_rng(0)
         for i, prompt in enumerate(_prompts(cfg, rng, args)):
-            loop.submit(Request(rid=i, prompt=prompt,
-                                max_new_tokens=args.max_new))
+            loop.submit(Request(
+                rid=i, prompt=prompt, max_new_tokens=args.max_new,
+                tenant=tenants[i % len(tenants)] if paged else None,
+                deadline_s=(args.deadline_ms / 1e3
+                            if paged and args.deadline_ms else None)))
         t0 = time.perf_counter()
         done = loop.run()
         dt = time.perf_counter() - t0
         toks = sum(len(r.output) for r in done)
         kind = "paged" if paged else "dense-loop"
+        shed = f" ({len(loop.failed)} shed)" if paged and loop.failed else ""
         print(f"[{impl:5s}/{kind}] {len(done)} reqs, {toks} tokens in "
-              f"{dt:.2f}s ({toks/dt:.1f} tok/s)")
+              f"{dt:.2f}s ({toks/dt:.1f} tok/s){shed}")
         if paged and loop.prefix is not None and args.shared_prefix:
             s = loop.prefix.stats()
             print(f"        prefix cache: hit_rate={s['hit_rate']:.2f} "
@@ -175,6 +194,21 @@ def main():
                   f"policy={pol['mode']}("
                   f"swap={pol['chose_swap']},"
                   f"recompute={pol['chose_recompute']})")
+        if paged and args.deadline_ms:
+            ss = loop.sched_stats()
+            print(f"        deadlines: budget={args.deadline_ms:.0f}ms "
+                  f"expired={ss['expired']} completed={len(done)} "
+                  f"(partial outputs kept on shed requests)")
+        if paged and args.tenant:
+            ts = loop.metrics()["tenants"]
+            for name, row in sorted(ts["tenants"].items()):
+                print(f"        tenant[{name}]: "
+                      f"completed={row['completed']} "
+                      f"cancelled={row['cancelled']} "
+                      f"expired={row['expired']} "
+                      f"pages_held={row['pages_held']} "
+                      f"queued={row['queued']} "
+                      f"swap_bytes={row['swap_bytes']}")
         if paged and args.trace:
             m = loop.metrics()
             tel = m["telemetry"]

@@ -173,6 +173,27 @@ class ArchConfig:
     serve_queue_limit: int = 0   # backpressure: submit raises
                                  # AdmissionError once this many
                                  # requests queue (0 = unbounded)
+    serve_deadline_s: float = 0.0  # default per-request TTL in seconds
+                                 # from submit; a request past it is
+                                 # shed at the next step boundary with
+                                 # DeadlineExceededError + partial
+                                 # output (0 = no deadline).  A
+                                 # request's own deadline_s overrides.
+    serve_tenant_page_quota: int = 0  # soft per-tenant cap on KV pages
+                                 # held across live slots: an over-
+                                 # quota tenant's queued work is
+                                 # skipped at admission only while an
+                                 # under-quota tenant waits (work-
+                                 # conserving; 0 = off)
+    serve_tenant_swap_bytes: int = 0  # per-tenant host-RAM budget in
+                                 # the swap store; a tenant at budget
+                                 # evicts its own LRU pages, never
+                                 # another tenant's (0 = global
+                                 # budget only)
+    serve_tenant_queue_limit: int = 0  # per-tenant backpressure:
+                                 # submit raises QuotaExceededError
+                                 # once a tenant has this many queued
+                                 # requests (0 = unbounded)
     serve_check_invariants: bool = False  # debug hook: run
                                  # PageManager/PrefixCache/Scheduler
                                  # structural checks after every drain

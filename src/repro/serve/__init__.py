@@ -1,6 +1,9 @@
 from repro.serve.loop import ServeLoop, Request  # noqa: F401
 from repro.serve.paged import PagedServeLoop, PageManager  # noqa: F401
 from repro.serve.prefix_cache import PrefixCache, RadixNode  # noqa: F401
-from repro.serve.scheduler import (AdmissionError, PoolExhaustedError,  # noqa: F401
+from repro.serve.scheduler import (AdmissionError, CancelledError,  # noqa: F401
+                                   DeadlineExceededError,
+                                   PoolExhaustedError, QuotaExceededError,
                                    SchedEntry, Scheduler)
+from repro.serve.faults import FaultInjector, FaultPlan, NULL_FAULTS  # noqa: F401
 from repro.serve.spec import Drafter, NGramDrafter, make_drafter  # noqa: F401

@@ -1,0 +1,164 @@
+"""Deterministic seeded fault injection for the paged serving stack.
+
+The serve loop's oracle discipline covers the happy path: every
+feature is bit-identical to the dense reference when a request runs to
+completion.  This module supplies the same discipline for the *failure*
+paths — pool exhaustion, host-store refusals, torn/corrupted swap
+pages, admission stalls, and client cancels — by making each of them a
+**named, seeded, countable event** the chaos tests and the bench can
+replay exactly.
+
+``FaultPlan``
+    A pure-data schedule: one RNG seed, a per-site firing probability,
+    and a per-site cap on total fires (the cap guarantees a chaotic
+    drain still terminates — after the budget is spent the loop is
+    fault-free and must converge).
+
+``FaultInjector``
+    The live object the loop threads through its fault sites.  Each
+    ``fire(site)`` consumes the injector's RNG deterministically, so a
+    given (plan, workload) pair replays the identical fault sequence —
+    which is what lets the chaos bench assert "the no-fault run and the
+    fault run completed the same requests with identical outputs".
+
+Inert by default: loops built without a plan hold the shared
+``NULL_FAULTS`` twin (same shape as ``telemetry.NULL``), so every site
+costs one attribute lookup and a ``False`` return in production.
+
+Fault-site catalogue (the names ``fire`` accepts — a typo'd rate key
+fails construction, not silently never-fires):
+
+===============  ==========================================================
+``alloc``        a page allocation inside ``_admit``/``_grow_to`` pretends
+                 the pool is exhausted (admission blocks; mid-decode growth
+                 preempts a victim) — the pool itself is untouched
+``swap_put``     ``SwapStore.put`` refuses the page as if the host budget
+                 were exhausted (the victim falls back to recompute-resume)
+``swap_corrupt`` one byte of a just-stored host page is flipped *after*
+                 its checksum was computed (a torn write / bit rot model);
+                 the swap-in verify must catch it, drop the page, and the
+                 request must recompute — never scatter corrupt KV
+``admit_stall``  the admission head is spuriously blocked for one round
+                 (models transient resource contention)
+``cancel``       the loop cancels one live or queued request chosen by the
+                 injector's RNG (a client disconnect)
+===============  ==========================================================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["SITES", "FaultPlan", "FaultInjector", "NULL_FAULTS"]
+
+SITES = ("alloc", "swap_put", "swap_corrupt", "admit_stall", "cancel")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded fault schedule.  ``rates`` maps a site name to its
+    per-arm firing probability (absent = 0.0 = never); ``max_fires``
+    caps how many times each site may fire over the plan's lifetime
+    (<= 0 = unlimited — chaos tests should keep the default so a
+    faulted drain provably terminates)."""
+
+    seed: int = 0
+    rates: Dict[str, float] = dataclasses.field(default_factory=dict)
+    max_fires: int = 64
+
+    def __post_init__(self):
+        bad = set(self.rates) - set(SITES)
+        if bad:
+            raise ValueError(
+                f"unknown fault site(s) {sorted(bad)}; known: {SITES}")
+        for site, rate in self.rates.items():
+            if not 0.0 <= float(rate) <= 1.0:
+                raise ValueError(
+                    f"fault rate for {site!r} must be in [0, 1], "
+                    f"got {rate}")
+
+
+class FaultInjector:
+    """Live seeded injector: ``fire(site)`` rolls the plan's RNG and
+    reports whether the site faults this time.  Deterministic given
+    (plan, call order): the RNG is consumed only for sites with a
+    nonzero rate that are still under their fire cap, so inert sites
+    never perturb the stream."""
+
+    enabled = True
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.rng = random.Random(plan.seed)
+        self.armed: Dict[str, int] = {s: 0 for s in SITES}
+        self.fired: Dict[str, int] = {s: 0 for s in SITES}
+
+    def fire(self, site: str) -> bool:
+        """One arming of ``site``; True => the caller must fault."""
+        rate = self.plan.rates.get(site, 0.0)
+        self.armed[site] += 1
+        if rate <= 0.0:
+            return False
+        if self.plan.max_fires > 0 and \
+                self.fired[site] >= self.plan.max_fires:
+            return False
+        if self.rng.random() < rate:
+            self.fired[site] += 1
+            return True
+        return False
+
+    def choice(self, seq):
+        """Seeded pick (e.g. which request an injected cancel hits)."""
+        return self.rng.choice(list(seq))
+
+    def corrupt(self, data) -> None:
+        """Flip one byte of one leaf of a host-page pytree **in
+        place** — the torn-write model behind the ``swap_corrupt``
+        site.  Called after the page's checksum was computed, so the
+        swap-in verify must detect the damage."""
+        leaves = [a for a in jax.tree.leaves(data) if a.size]
+        leaf = leaves[self.rng.randrange(len(leaves))]
+        flat = leaf.reshape(-1).view(np.uint8)
+        flat[self.rng.randrange(flat.size)] ^= 0xFF
+
+    def stats(self) -> dict:
+        return {
+            "enabled": True,
+            "seed": self.plan.seed,
+            "max_fires": self.plan.max_fires,
+            "rates": dict(self.plan.rates),
+            "armed": dict(self.armed),
+            "fired": dict(self.fired),
+        }
+
+
+class _NullFaultInjector:
+    """Inert twin (the ``telemetry.NULL`` pattern): every site check is
+    one attribute lookup and a constant ``False``."""
+
+    enabled = False
+
+    def fire(self, site: str) -> bool:
+        return False
+
+    def stats(self) -> dict:
+        return {"enabled": False}
+
+
+NULL_FAULTS = _NullFaultInjector()
+
+
+def make_injector(faults) -> object:
+    """Coerce a ctor argument into an injector: ``None`` => the shared
+    inert twin, a ``FaultPlan`` => a fresh injector, an injector (or
+    anything injector-shaped) passes through."""
+    if faults is None:
+        return NULL_FAULTS
+    if isinstance(faults, FaultPlan):
+        return FaultInjector(faults)
+    return faults

@@ -45,12 +45,39 @@ class Request:
     rid: int
     prompt: np.ndarray            # [S] int32
     max_new_tokens: int = 16
-    output: Optional[np.ndarray] = None
+    output: Optional[np.ndarray] = None  # generated tokens.  Complete
+                                  # iff finish_reason is 'stop'/'length';
+                                  # a cancelled/expired request carries
+                                  # its PARTIAL output here (always a
+                                  # prefix of what an uninterrupted run
+                                  # would emit).
     priority: Optional[int] = None  # paged-loop admission priority
                                   # (higher = sooner; None = the
                                   # configured default).  The dense
                                   # loop is strictly FIFO and ignores
                                   # it.
+    tenant: Optional[str] = None  # fairness label (paged loop):
+                                  # per-tenant page quotas, swap-byte
+                                  # budgets, and load-weighted aging
+                                  # key off it.  None = the shared
+                                  # 'default' tenant.  The dense loop
+                                  # ignores it.
+    deadline_s: Optional[float] = None  # TTL budget in seconds from
+                                  # submit; the paged loop sheds the
+                                  # request (typed reason, partial
+                                  # output) at the first step boundary
+                                  # past it.  None follows
+                                  # cfg.serve_deadline_s (0 = none).
+                                  # The dense loop ignores it.
+    finish_reason: Optional[str] = None  # terminal state: 'stop' (eos)
+                                  # | 'length' (max_new_tokens / s_max)
+                                  # | 'cancelled' | 'deadline' (paged
+                                  # loop; None while in flight)
+    error: Optional[BaseException] = None  # the typed reason for a
+                                  # non-completion: CancelledError or
+                                  # DeadlineExceededError
+                                  # (serve/scheduler.py); None on
+                                  # success
 
 
 class ServeLoop:

@@ -114,10 +114,14 @@ import numpy as np
 from repro.kernels import autotune
 from repro.kernels.paged import PageSpec, spec_for
 from repro.models import lm
+from repro.serve.faults import make_injector
 from repro.serve.loop import Request
 from repro.serve.prefix_cache import PrefixCache
-from repro.serve.scheduler import (AdmissionError, PoolExhaustedError,
-                                   SchedEntry, Scheduler, SwapPolicy)
+from repro.serve.scheduler import (AdmissionError, CancelledError,
+                                   DeadlineExceededError,
+                                   PoolExhaustedError, QuotaExceededError,
+                                   SchedEntry, Scheduler, SwapPolicy,
+                                   tenant_of)
 from repro.serve.spec import make_drafter
 from repro.serve.swap import StagingRing, SwapStore
 from repro.serve.telemetry import NULL, Histogram, Telemetry
@@ -228,7 +232,12 @@ class PagedServeLoop:
                  swap_policy: Optional[str] = None,
                  check_invariants: Optional[bool] = None,
                  telemetry: Optional[bool] = None,
-                 trace_path: Optional[str] = None):
+                 trace_path: Optional[str] = None,
+                 tenant_page_quota: Optional[int] = None,
+                 tenant_swap_bytes: Optional[int] = None,
+                 tenant_queue_limit: Optional[int] = None,
+                 deadline_s: Optional[float] = None,
+                 faults=None):
         if not lm.supports_paged(cfg):
             raise ValueError(
                 f"config {cfg.name!r} has non-pageable block kinds; "
@@ -273,6 +282,31 @@ class PagedServeLoop:
             aging=getattr(cfg, "serve_sched_aging", 64),
             default_priority=getattr(cfg, "serve_priority_default", 0))
         self.queue_limit = int(getattr(cfg, "serve_queue_limit", 0))
+        # per-tenant fairness knobs (0 = off).  The page quota is SOFT:
+        # _next_entry passes over a tenant sitting at its quota only
+        # while an under-quota tenant waits — a lone tenant still gets
+        # the whole pool (work-conserving).  The queue limit is hard
+        # (typed QuotaExceededError at submit).
+        self.tenant_page_quota = int(
+            getattr(cfg, "serve_tenant_page_quota", 0)
+            if tenant_page_quota is None else tenant_page_quota)
+        self.tenant_queue_limit = int(
+            getattr(cfg, "serve_tenant_queue_limit", 0)
+            if tenant_queue_limit is None else tenant_queue_limit)
+        # default per-request TTL (Request.deadline_s overrides; 0/None
+        # = no deadline).  Enforced at step boundaries, never mid-step.
+        self.deadline_s = float(
+            getattr(cfg, "serve_deadline_s", 0.0)
+            if deadline_s is None else deadline_s)
+        # seeded fault injection (serve/faults.py): None => the shared
+        # inert twin, so production sites cost one attribute read.
+        # Constructed before the swap store, which threads the same
+        # injector through its put path.
+        self.faults = make_injector(faults)
+        self._injected_block = False   # an admission blocked by an
+                                       # injected fault this step (the
+                                       # no-live-slots exhaustion raise
+                                       # must not fire on fake faults)
         # host-RAM page swap tier (serve/swap.py): preemption victims'
         # pages copy device->host and restore at resume instead of
         # recomputing from tokens; scheduler.SwapPolicy decides per
@@ -285,7 +319,11 @@ class PagedServeLoop:
             self.swap: Optional[SwapStore] = SwapStore(
                 page_size,
                 max_bytes=int(getattr(cfg, "serve_swap_bytes", 0)
-                              if swap_bytes is None else swap_bytes))
+                              if swap_bytes is None else swap_bytes),
+                tenant_budget=int(
+                    getattr(cfg, "serve_tenant_swap_bytes", 0)
+                    if tenant_swap_bytes is None else tenant_swap_bytes),
+                faults=self.faults)
             self.swap_policy: Optional[SwapPolicy] = SwapPolicy(
                 mode=(getattr(cfg, "serve_swap_policy", "auto")
                       if swap_policy is None else swap_policy))
@@ -362,6 +400,16 @@ class PagedServeLoop:
         self.caches, _ = lm.init_caches(cfg, batch_slots, s_max,
                                         paged=self.spec)
         self.done: List[Request] = []
+        # requests terminated WITHOUT completing — cancelled or past
+        # deadline, each carrying a typed Request.error and its partial
+        # output.  Disjoint from `done` (run() keeps its contract of
+        # returning completions only).
+        self.failed: List[Request] = []
+        self.cancelled = 0            # client/injected cancels
+        self.expired = 0              # deadline/TTL sheds
+        # per-tenant terminal counters ({tenant: {completed, cancelled,
+        # expired}}); live pages/queue depth are derived on demand
+        self.tenant_counters: dict = {}
         self.refills = 0              # mid-decode slot admissions (stats)
         self.prefill_tokens_run = 0   # chunk tokens actually prefilled
         self.prefill_tokens_saved = 0  # chunk tokens skipped via the cache
@@ -450,7 +498,14 @@ class PagedServeLoop:
         """Enqueue a request, SLO-aware: anything that can *never* be
         served fails fast here with a typed ``AdmissionError`` (a
         subclass of ValueError) instead of surfacing later as a shape
-        error or a drain that can never make progress."""
+        error or a drain that can never make progress.  The degradation
+        taxonomy sheds load at the door too: an already-spent deadline
+        raises ``DeadlineExceededError``, a tenant at its queued-share
+        limit raises ``QuotaExceededError``.
+
+        Ordering contract (regression-tested): every check runs before
+        the push and the telemetry event — a rejected submit leaves
+        ZERO residue in the scheduler, the counters, or the trace."""
         L = len(req.prompt)
         if not 0 < L <= self.S_max:
             raise AdmissionError(
@@ -464,14 +519,32 @@ class PagedServeLoop:
                 f"request {req.rid} can never fit: prompt needs "
                 f"{self._prefill_blocks(L)} pages, pool has {usable}"
             )
+        dl = getattr(req, "deadline_s", None)
+        if dl is None and self.deadline_s > 0:
+            dl = self.deadline_s
+        if dl is not None and dl <= 0:
+            raise DeadlineExceededError(
+                f"request {req.rid} submitted with a spent deadline "
+                f"budget ({dl}s); shed at the door"
+            )
+        tenant = tenant_of(req)
+        if self.tenant_queue_limit:
+            n_t = sum(1 for e in self.sched.queued()
+                      if tenant_of(e.req) == tenant)
+            if n_t >= self.tenant_queue_limit:
+                raise QuotaExceededError(
+                    f"tenant {tenant!r} at serve_tenant_queue_limit="
+                    f"{self.tenant_queue_limit}; retry later"
+                )
         if self.queue_limit and len(self.sched) >= self.queue_limit:
             raise AdmissionError(
                 f"backpressure: queue at serve_queue_limit="
                 f"{self.queue_limit}; retry later"
             )
         ent = self.sched.push(req, getattr(req, "priority", None))
+        ent.deadline_s = dl
         self.tel.event("submit", req.rid, prompt_tokens=L,
-                       priority=ent.priority)
+                       priority=ent.priority, tenant=tenant)
 
     def _prefill_blocks(self, L: int) -> int:
         """Blocks the padded chunk prefill of ``L`` tokens writes."""
@@ -556,6 +629,38 @@ class PagedServeLoop:
             return 0
         return len(self.prefix.match(ent.tokens, record=False))
 
+    def _tenant_pages(self) -> dict:
+        """Pool pages each tenant's live slots currently reference
+        (shared pages count once per referencing tenant — what matters
+        for fairness is the footprint a tenant's slots pin)."""
+        held: dict = {}
+        for s in self.slots:
+            if s is not None:
+                t = tenant_of(s["req"])
+                held[t] = held.get(t, 0) + len(s["blocks"])
+        return held
+
+    def _next_entry(self) -> Optional[SchedEntry]:
+        """The admission head under tenant fairness: strictly
+        best-first (effective priority, load-weighted tie-break, FIFO)
+        — except that a tenant sitting at its page quota is passed
+        over while any under-quota tenant has work queued.  Soft and
+        work-conserving: with only over-quota work waiting, the best
+        entry admits anyway (quotas shape contention, they never idle
+        the pool)."""
+        held = self._tenant_pages()
+        ent = self.sched.peek(tenant_load=held)
+        if (ent is not None and self.tenant_page_quota
+                and held.get(tenant_of(ent.req), 0)
+                >= self.tenant_page_quota):
+            alt = self.sched.peek(
+                eligible=lambda e: (held.get(tenant_of(e.req), 0)
+                                    < self.tenant_page_quota),
+                tenant_load=held)
+            if alt is not None:
+                ent = alt
+        return ent
+
     def _alloc_with_evict(self, n: int) -> Optional[List[int]]:
         """Allocate ``n`` pages, evicting LRU unreferenced cached
         prefixes under pool pressure (locked/mapped pages are refcount
@@ -594,8 +699,12 @@ class PagedServeLoop:
         whatever the prefix cache kept from the preemption transfer)
         and its last-position logits continue the argmax chain
         bit-identically to the decode step the preemption cut off."""
-        ent = self.sched.peek()
+        ent = self._next_entry()
         if ent is None:
+            return "blocked"
+        if self.faults.fire("admit_stall"):
+            # injected transient contention: the head waits one round
+            self._injected_block = True
             return "blocked"
         tokens = ent.tokens
         L = len(tokens)
@@ -616,6 +725,13 @@ class PagedServeLoop:
             # hold the matched pages so pressure-eviction (possibly our
             # own, below) can never reclaim them out from under us
             self.prefix.lock(hits)
+        if self.faults.fire("alloc"):
+            # injected exhaustion: behave exactly like a real short
+            # pool — drop the locks and wait (the pool is untouched)
+            if hits:
+                self.pages.release([n.page_id for n in hits])
+            self._injected_block = True
+            return "blocked"
         page_ids = self._alloc_with_evict(need)
         if page_ids is None and hits:
             # the locked hits themselves can pin the pool (their pages
@@ -638,6 +754,11 @@ class PagedServeLoop:
         if page_ids is None:
             return "blocked"              # pool exhausted: request waits
         self.sched.pop(ent)
+        # the entry is live again: any host-store pages it parked are
+        # plain shareable cache from here on (LRU-governed), no longer
+        # owned by a waiting request — cancel purges apply only while
+        # swapped OUT
+        ent.swap_blocks = 0
         tel, rid = self.tel, ent.req.rid
         t_adm = tel.now()
         # the queued span covers the latest (re-)enqueue; resumes show
@@ -747,9 +868,14 @@ class PagedServeLoop:
         )
 
     def _finish(self, slot_i: int, entry) -> None:
-        entry["req"].output = np.asarray(entry["out"], np.int32)
-        self.done.append(entry["req"])
-        self.tel.event("finished", entry["req"].rid,
+        req = entry["req"]
+        req.output = np.asarray(entry["out"], np.int32)
+        req.finish_reason = (
+            "stop" if (self.eos_id is not None
+                       and entry["out"][-1] == self.eos_id) else "length")
+        self.done.append(req)
+        self._tenant_bump(tenant_of(req), "completed")
+        self.tel.event("finished", req.rid,
                        tokens=len(entry["out"]),
                        pages=len(entry["blocks"]))
         blocks = entry["blocks"]
@@ -818,7 +944,8 @@ class PagedServeLoop:
                 and self.swap_policy.decide(
                     replay_tokens=lens,
                     nbytes=n_full * self.page_bytes())):
-            swapped = self._swap_out(full, blocks[:n_full])
+            swapped = self._swap_out(full, blocks[:n_full],
+                                     tenant=tenant_of(entry["req"]))
         parked = 0
         if swapped:
             # the host copies hold the KV: every device page frees
@@ -838,6 +965,10 @@ class PagedServeLoop:
         self.slots[slot_i] = None
         ent.tokens = full
         ent.out = list(entry["out"])
+        # ownership marker for cancel/expire-while-parked: purging
+        # tries every full block (puts refused mid-run leave gaps;
+        # purge skips missing keys)
+        ent.swap_blocks = n_full if swapped else 0
         self.sched.requeue(ent)
         self.preemptions += 1
         self.preempted_tokens += lens
@@ -848,6 +979,121 @@ class PagedServeLoop:
             self.tel.event("swapped_out", entry["req"].rid,
                            pages=swapped, bytes=swapped * self.page_bytes())
 
+    # -- cancellation / deadlines --------------------------------------------
+
+    def cancel(self, rid: int, reason: str = "cancelled") -> bool:
+        """Terminate request ``rid`` from *any* state, releasing every
+        resource it holds:
+
+        - **decoding / mid-prefill** (live slot): written full pages
+          park into the prefix cache (they hold canonical KV — free
+          warm-start for a retry), the rest release, the block-table
+          row resets to scratch;
+        - **queued / preempted**: the scheduler entry is removed
+          (without polluting the queue-wait histogram);
+        - **swapped-out**: additionally purges the entry's pages from
+          the host ``SwapStore`` — a never-resumed victim must not
+          strand host bytes until LRU pressure.
+
+        The request lands in ``self.failed`` with its partial output, a
+        typed ``error`` (``CancelledError`` / ``DeadlineExceededError``)
+        and ``finish_reason``, and emits the terminal ``cancelled``
+        lifecycle event.  Returns False when ``rid`` is not in flight
+        (already finished, already cancelled, or never submitted) —
+        cancel is idempotent, never an error."""
+        for i in range(self.B):
+            e = self.slots[i]
+            if e is not None and e["req"].rid == rid:
+                self._terminate_slot(i, e, reason)
+                return True
+        for ent in self.sched.queued():
+            if ent.req.rid == rid:
+                self.sched.remove(ent)
+                self._purge_swapped(ent)
+                self._mark_terminated(ent.req, reason, ent.out)
+                return True
+        return False
+
+    def _terminate_slot(self, slot_i: int, entry, reason: str) -> None:
+        """Release a live slot without requeue: same page accounting
+        as a recompute preemption (written full pages transfer into
+        the prefix tree — canonical KV, content-keyed — the partial
+        tail frees), but the request terminates instead of parking."""
+        lens = int(self.lens[slot_i])
+        full = np.concatenate([
+            np.asarray(entry["req"].prompt, np.int32),
+            np.asarray(entry["out"], np.int32),
+        ])
+        assert len(full) == lens + 1, \
+            f"slot {slot_i} token accounting diverged at cancel: " \
+            f"{len(full)} vs lens {lens} + 1"
+        blocks = entry["blocks"]
+        n_full = lens // self.spec.page_size
+        if self._prefix_enabled and self.prefix is not None and n_full:
+            self.prefix.insert(full, blocks[:n_full])
+            rest = blocks[n_full:]
+        else:
+            rest = blocks
+        if len(rest):
+            self.pages.release(list(rest))
+        self.block_table[slot_i] = 0      # scratch: no stale aliasing
+        self.lens[slot_i] = 0
+        self.slots[slot_i] = None
+        self._mark_terminated(entry["req"], reason, entry["out"])
+
+    def _purge_swapped(self, ent: SchedEntry) -> None:
+        """Release a parked entry's host-store pages (the swapped-out
+        arm of cancel/expire).  No-op unless the entry owns swapped
+        blocks."""
+        if self.swap is not None and ent.swap_blocks:
+            self.swap.purge(ent.tokens, ent.swap_blocks)
+            ent.swap_blocks = 0
+
+    def _mark_terminated(self, req: Request, reason: str, out) -> None:
+        """Common terminal bookkeeping for cancels and deadline sheds:
+        typed reason on the request, partial output preserved, the
+        ``cancelled`` lifecycle event, global + per-tenant counters."""
+        req.output = np.asarray(list(out), np.int32)
+        req.finish_reason = reason
+        if reason == "deadline":
+            req.error = DeadlineExceededError(
+                f"request {req.rid} exceeded its deadline budget")
+            self.expired += 1
+            self._tenant_bump(tenant_of(req), "expired")
+        else:
+            req.error = CancelledError(f"request {req.rid} cancelled")
+            self.cancelled += 1
+            self._tenant_bump(tenant_of(req), "cancelled")
+        self.failed.append(req)
+        self.tel.event("cancelled", req.rid, reason=reason,
+                       tokens=len(req.output))
+
+    def _enforce_deadlines(self) -> None:
+        """Shed every request whose TTL ran out — queued entries (with
+        their swapped-out host pages purged) and live slots alike.
+        Called once per step, BEFORE admissions: a doomed entry never
+        wastes a prefill.  Step-boundary enforcement is deliberate —
+        mid-forward aborts would buy milliseconds and cost the
+        bit-exactness discipline."""
+        now = time.monotonic()
+        for ent in list(self.sched.queued()):
+            if (ent.deadline_s is not None
+                    and now - ent.t_submit >= ent.deadline_s):
+                self.sched.remove(ent)
+                self._purge_swapped(ent)
+                self._mark_terminated(ent.req, "deadline", ent.out)
+        for i in range(self.B):
+            e = self.slots[i]
+            if e is None:
+                continue
+            dl = e["sched"].deadline_s
+            if dl is not None and now - e["sched"].t_submit >= dl:
+                self._terminate_slot(i, e, "deadline")
+
+    def _tenant_bump(self, tenant: str, key: str) -> None:
+        d = self.tenant_counters.setdefault(tenant, {})
+        d[key] = d.get(key, 0) + 1
+
     # -- host-RAM swap tier ---------------------------------------------------
 
     def page_bytes(self) -> int:
@@ -856,7 +1102,7 @@ class PagedServeLoop:
         unit and the host store's per-page footprint."""
         return self.kv_pool_bytes() // self.spec.n_pages
 
-    def _swap_out(self, full, blocks) -> int:
+    def _swap_out(self, full, blocks, tenant=None) -> int:
         """Copy written full pages ``blocks`` of token history ``full``
         device→host through the staging ring and put each page in the
         content-addressed store.  Returns how many pages are
@@ -877,9 +1123,9 @@ class PagedServeLoop:
             with self.tel.annotate("repro.serve.swap_gather"):
                 dev = self._swap_gather(self.caches, jnp.asarray(pids))
             for meta, host in ring.stage((base, len(tail)), dev):
-                stored += self._store_staged(full, meta, host)
+                stored += self._store_staged(full, meta, host, tenant)
         for meta, host in ring.drain():
-            stored += self._store_staged(full, meta, host)
+            stored += self._store_staged(full, meta, host, tenant)
         moved = self.swap_out_bytes - bytes0
         if moved:
             self.swap_policy.observe_copy(moved,
@@ -890,7 +1136,7 @@ class PagedServeLoop:
             self.tel.inc("swap.out_bytes", moved)
         return stored
 
-    def _store_staged(self, full, meta, host) -> int:
+    def _store_staged(self, full, meta, host, tenant=None) -> int:
         """Split one matured ring transaction into per-page host copies
         and store each under its content key.  ``host`` leaves are
         ``[n_layers, R, page_size, ...]``; the per-page ``.copy()``
@@ -900,7 +1146,7 @@ class PagedServeLoop:
         stored = 0
         for j in range(n):
             page = jax.tree.map(lambda a: a[:, j].copy(), host)
-            if self.swap.put(full, base + j, page):
+            if self.swap.put(full, base + j, page, tenant=tenant):
                 stored += 1
                 self.swap_out_bytes += int(
                     sum(a.nbytes for a in jax.tree.leaves(page)))
@@ -972,12 +1218,25 @@ class PagedServeLoop:
         refill.  Returns True while work remains — an arrival-process
         driver submits between steps; ``run`` just drains."""
         self.sched.tick()
+        self._injected_block = False
+        if self.faults.fire("cancel"):
+            # injected client disconnect: seeded pick over everything
+            # in flight (live slots and queued/parked entries alike)
+            rids = [s["req"].rid for s in self.slots if s is not None]
+            rids += [e.req.rid for e in self.sched.queued()]
+            if rids:
+                self.cancel(self.faults.choice(rids))
+        self._enforce_deadlines()
         mid = any(s is not None for s in self.slots)
         self._fill_free_slots(mid_decode=mid)
         live = [i for i in range(self.B) if self.slots[i] is not None]
         self.peak_live_slots = max(self.peak_live_slots, len(live))
         if not live:
             if len(self.sched):
+                if self._injected_block:
+                    # the blockage was an injected fault, not a real
+                    # short pool: the head retries next round
+                    return True
                 # every slot is free and eviction has been tried, yet
                 # the best entry still can't get pages: the pool is
                 # simply too small for this request's plan (reserved
@@ -1029,6 +1288,12 @@ class PagedServeLoop:
         (plus evictable prefixes) cannot supply the next page — the
         caller preempts a victim or truncates the draft."""
         while len(entry["blocks"]) <= last_blk:
+            # the injected-exhaustion site fires only when a REAL alloc
+            # is due (inside the loop): a fault here implies the draft/
+            # write genuinely needed a page, preserving the caller's
+            # failed-grow => truncation-shrinks invariant
+            if self.faults.fire("alloc"):
+                return False
             pages = self._alloc_with_evict(1)
             if pages is None:
                 return False
@@ -1305,6 +1570,9 @@ class PagedServeLoop:
         return {
             **self.sched.stats(),
             "on_demand": self.on_demand,
+            "cancelled": self.cancelled,
+            "expired": self.expired,
+            "failed": len(self.failed),
             "preemptions": self.preemptions,
             "resumes": self.resumes,
             "resume_prefill_tokens": self.resume_prefill_tokens,
@@ -1358,6 +1626,38 @@ class PagedServeLoop:
             "page_bytes": self.page_bytes(),
         }
 
+    def tenant_stats(self) -> dict:
+        """Per-tenant fairness accounting (the ``metrics()`` tenants
+        subsystem): live pool/queue footprint plus terminal counters
+        per tenant, and the configured quotas.  Single-tenant
+        deployments see one 'default' row and zeroed quotas."""
+        held = self._tenant_pages()
+        queued: dict = {}
+        for e in self.sched.queued():
+            t = tenant_of(e.req)
+            queued[t] = queued.get(t, 0) + 1
+        swap_b = self.swap.tenant_bytes if self.swap is not None else {}
+        names = sorted(set(held) | set(queued)
+                       | set(self.tenant_counters) | set(swap_b))
+        per = {}
+        for t in names:
+            c = self.tenant_counters.get(t, {})
+            per[t] = {
+                "pages_held": held.get(t, 0),
+                "queued": queued.get(t, 0),
+                "completed": c.get("completed", 0),
+                "cancelled": c.get("cancelled", 0),
+                "expired": c.get("expired", 0),
+                "swap_bytes": swap_b.get(t, 0),
+            }
+        return {
+            "page_quota": self.tenant_page_quota,
+            "queue_limit": self.tenant_queue_limit,
+            "swap_budget": (self.swap.tenant_budget
+                            if self.swap is not None else 0),
+            "tenants": per,
+        }
+
     def metrics(self) -> dict:
         """One snapshot covering every serving subsystem — the unified
         observability surface the per-subsystem dicts (``spec_stats``,
@@ -1381,6 +1681,8 @@ class PagedServeLoop:
                       "pool_bytes": self.kv_pool_bytes()},
             "scheduler": self.sched_stats(),
             "swap": self.swap_stats(),
+            "tenants": self.tenant_stats(),
+            "faults": self.faults.stats(),
             "autotune": autotune.snapshot_stats(),
         }
         if self.tel.enabled:

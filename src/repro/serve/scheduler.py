@@ -12,7 +12,18 @@ and this module supplies the machinery that makes it survivable:
   whole pool, backpressure queue limit) instead of surfacing later as
   a shape error or a serve loop that can never drain.
   ``PoolExhaustedError`` is the runtime counterpart: the pool cannot
-  cover even a lone request's growth and no victim exists.
+  cover even a lone request's growth and no victim exists.  The
+  degradation taxonomy extends it: ``DeadlineExceededError`` (TTL
+  spent — at the door or mid-flight), ``QuotaExceededError`` (a
+  tenant's queued-request share is full), and ``CancelledError``
+  (client cancel; attached to the request, never raised by the loop).
+- **Per-tenant fairness.**  ``Request.tenant`` labels work;
+  ``peek(tenant_load=...)`` breaks effective-priority ties toward the
+  tenant holding the fewest pool pages (load-weighted aging: a burst
+  from one tenant cannot FIFO-starve an equal-priority peer), and
+  ``peek(eligible=...)`` lets the loop pass over tenants sitting at
+  their page quota while under-quota work waits — soft quotas, so a
+  lone tenant still gets the whole pool (work-conserving).
 - **Priority queue with aging.**  ``submit`` order is a *hint*; the
   queue is drained best-first by ``priority`` (higher = sooner), with
   FIFO among equals and a starvation-avoidance aging rule: an entry
@@ -57,9 +68,35 @@ class AdmissionError(ValueError):
     ``submit`` (fail fast) rather than hang or crash the drain."""
 
 
+class DeadlineExceededError(AdmissionError):
+    """The request's deadline/TTL budget is spent.  Raised by
+    ``submit`` for an already-expired budget (load shedding at the
+    door); attached as ``Request.error`` when the loop sheds a queued
+    or live request whose deadline passed mid-flight."""
+
+
+class QuotaExceededError(AdmissionError):
+    """A per-tenant quota refused the request at ``submit`` (the
+    tenant's queued-request share is full).  Page quotas are enforced
+    softly at admission instead — see ``PagedServeLoop``."""
+
+
+class CancelledError(RuntimeError):
+    """The request was cancelled (client disconnect / injected cancel).
+    Never raised by the loop — attached as ``Request.error`` so the
+    caller gets a typed reason next to the partial output."""
+
+
 class PoolExhaustedError(RuntimeError):
     """The page pool cannot cover required growth and no preemption
     victim exists (or ``serve_preempt_policy='never'`` forbids one)."""
+
+
+def tenant_of(req) -> str:
+    """A request's tenant label (``Request.tenant``; unset/None maps to
+    the shared 'default' tenant, so single-tenant deployments never
+    see quota machinery)."""
+    return getattr(req, "tenant", None) or "default"
 
 
 @dataclasses.dataclass
@@ -82,6 +119,16 @@ class SchedEntry:
     t_submit: float              # original submit time (TTFT anchor)
     t_enqueue: float             # latest enqueue time (queue-wait stats)
     preemptions: int = 0
+    deadline_s: Optional[float] = None  # TTL from t_submit (None = no
+                                 # deadline); enforced by the loop at
+                                 # step boundaries, survives requeues
+    swap_blocks: int = 0         # full blocks this parked entry may
+                                 # hold in the host SwapStore (set at
+                                 # swap-out, cleared at re-admission):
+                                 # cancelling/expiring the entry purges
+                                 # exactly these keys so a never-
+                                 # resumed victim cannot strand host
+                                 # pages until LRU pressure
 
 
 class Scheduler:
@@ -103,6 +150,7 @@ class Scheduler:
         # stats
         self.submitted = 0
         self.requeued = 0        # preemption re-entries
+        self.removed = 0         # cancels / deadline sheds while queued
         self.peak_queue = 0
         # bounded per-admission queue-wait accounting (observed at
         # ``pop``): running quantile summary + capped sample tail, O(1)
@@ -151,14 +199,29 @@ class Scheduler:
             return ent.priority
         return ent.priority + (self.ticks - ent.enqueue_tick) // self.aging
 
-    def peek(self) -> Optional[SchedEntry]:
+    def peek(self, eligible=None,
+             tenant_load: Optional[dict] = None) -> Optional[SchedEntry]:
         """Best admission candidate: highest effective priority, FIFO
         among equals.  Strictly best-first — a blocked best entry is
         never bypassed by a smaller lower-priority one (no head-of-line
-        overtaking; aging bounds how long anything waits)."""
-        if not self._q:
+        overtaking; aging bounds how long anything waits).
+
+        ``tenant_load`` (tenant -> pages currently held) weights the
+        tie-break only: among entries of equal effective priority the
+        lightest-loaded tenant goes first, so aging works *per tenant*
+        under contention — a burst from one tenant cannot FIFO-starve
+        another at the same priority.  ``eligible`` restricts the
+        candidate set (the loop passes the under-page-quota predicate);
+        returns None when nothing qualifies."""
+        cands = self._q if eligible is None \
+            else [e for e in self._q if eligible(e)]
+        if not cands:
             return None
-        return max(self._q,
+        if tenant_load:
+            return max(cands, key=lambda e: (
+                self.effective_priority(e),
+                -tenant_load.get(tenant_of(e.req), 0), -e.seq))
+        return max(cands,
                    key=lambda e: (self.effective_priority(e), -e.seq))
 
     def pop(self, ent: SchedEntry) -> None:
@@ -167,6 +230,13 @@ class Scheduler:
         from its requeue, not first submission; TTFT covers that)."""
         self._q.remove(ent)
         self.queue_wait_s.observe(time.monotonic() - ent.t_enqueue)
+
+    def remove(self, ent: SchedEntry) -> None:
+        """Drop a queued entry without admitting it (cancel / deadline
+        shed).  No queue-wait observation — that histogram measures
+        waits that ended in admission."""
+        self._q.remove(ent)
+        self.removed += 1
 
     # -- preemption ---------------------------------------------------------
 
@@ -196,6 +266,7 @@ class Scheduler:
             "queued": len(self._q),
             "submitted": self.submitted,
             "requeued": self.requeued,
+            "removed": self.removed,
             "peak_queue": self.peak_queue,
             "ticks": self.ticks,
             "queue_wait_s": self.queue_wait_s.summary(),

@@ -249,18 +249,24 @@ class MetricsRegistry:
 # swapped prefix).
 LIFECYCLE: Dict[Optional[str], set] = {
     None: {"submit"},
-    "submit": {"queued"},
-    "queued": {"admitted", "resumed", "swapped_in"},
-    "admitted": {"prefill_chunk"},
-    "resumed": {"prefill_chunk"},
-    "swapped_in": {"admitted", "resumed"},
+    "submit": {"queued", "cancelled"},
+    "queued": {"admitted", "resumed", "swapped_in", "cancelled"},
+    "admitted": {"prefill_chunk", "cancelled"},
+    "resumed": {"prefill_chunk", "cancelled"},
+    "swapped_in": {"admitted", "resumed", "cancelled"},
     "prefill_chunk": {"prefill_chunk", "decode", "verify", "finished",
-                      "preempted"},
-    "decode": {"decode", "verify", "finished", "preempted"},
-    "verify": {"decode", "verify", "finished", "preempted"},
-    "preempted": {"queued", "swapped_out"},
-    "swapped_out": {"queued"},
+                      "preempted", "cancelled"},
+    "decode": {"decode", "verify", "finished", "preempted", "cancelled"},
+    "verify": {"decode", "verify", "finished", "preempted", "cancelled"},
+    "preempted": {"queued", "swapped_out", "cancelled"},
+    "swapped_out": {"queued", "cancelled"},
     "finished": set(),
+    # the OTHER terminal state: client cancel or deadline/TTL expiry
+    # (the event's `reason` attr distinguishes them).  Reachable from
+    # every non-terminal state — a request can be cancelled while
+    # queued (straight after submit), mid-prefill/decode/verify, after
+    # preemption, or while its pages sit swapped out on the host.
+    "cancelled": set(),
 }
 
 # Names the grammar governs.  Auxiliary rid-attributed events
@@ -274,8 +280,9 @@ def validate_lifecycle(events: Iterable[dict],
     """Check every request's event sequence (in emission order) against
     ``LIFECYCLE``.  Raises AssertionError naming the offending request
     and transition; returns ``{rid: [event names]}`` on success.
-    ``require_finished`` additionally asserts every request reached
-    ``finished`` (set False for a trace cut mid-drain)."""
+    ``require_finished`` additionally asserts every request reached a
+    terminal state — ``finished`` or ``cancelled`` (set False for a
+    trace cut mid-drain)."""
     seqs: Dict[int, List[str]] = {}
     for ev in events:
         rid = ev.get("rid")
@@ -292,8 +299,9 @@ def validate_lifecycle(events: Iterable[dict],
             )
             prev = n
         if require_finished:
-            assert prev == "finished", \
-                f"request {rid} never finished (last event {prev!r})"
+            assert prev in ("finished", "cancelled"), \
+                f"request {rid} never reached a terminal state " \
+                f"(last event {prev!r})"
     return seqs
 
 

@@ -266,13 +266,16 @@ def test_metrics_agree_with_legacy_stats(setup):
     loop.run()
     m = loop.metrics()
     assert set(m) == {"pool", "prefix_cache", "spec", "quant",
-                      "scheduler", "swap", "autotune", "telemetry"}
+                      "scheduler", "swap", "tenants", "faults",
+                      "autotune", "telemetry"}
     # the unified document and the legacy dicts are the same source
     spec = loop.spec_stats()
     for k, v in spec.items():
         assert m["spec"][k] == v
     assert m["scheduler"] == telemetry.jsonable(loop.sched_stats())
     assert m["swap"] == loop.swap_stats() == {"enabled": False}
+    assert m["tenants"] == loop.tenant_stats()
+    assert m["faults"] == {"enabled": False}
     assert m["prefix_cache"] == loop.prefix.stats()
     assert m["pool"]["in_use"] == loop.pages.in_use
     assert m["pool"]["cow_copies"] == loop.cow_copies
